@@ -1,0 +1,99 @@
+"""Shared benchmark infrastructure: a small *trained* LM (realistic
+activation correlations/outliers come from training, not init), calibrated
+taps, and per-layer (W, Σx, samples) extraction.
+
+The trained checkpoint is cached under results/bench_model so the whole
+benchmark suite trains it once.
+"""
+from __future__ import annotations
+
+import os
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ck
+from repro.configs import get_config
+from repro.core.calibration import Taps, calibrate
+from repro.data import calibration_batches, make_batch
+from repro.models import build
+
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench_model")
+_ARCH = "catlm_60m"
+
+
+def bench_cfg():
+    return get_config(_ARCH).scaled(
+        n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=768, vocab=2048, cat_block=64)
+
+
+@lru_cache(maxsize=1)
+def trained_model(steps: int = 120):
+    """-> (cfg, model, params) — trained once, cached on disk."""
+    cfg = bench_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if ck.latest_step(BENCH_DIR) is not None:
+        out = ck.restore(BENCH_DIR, None, params)
+        return cfg, model, out["params"]
+    from repro.optim import AdamW, warmup_cosine
+    opt = AdamW(lr=warmup_cosine(1e-3, 10, steps))
+    state = opt.init(params)
+
+    @jax.jit
+    def step_fn(p, s, batch):
+        (l, _), g = jax.value_and_grad(model.loss, has_aux=True)(p, batch)
+        p, s = opt.update(p, g, s)
+        return p, s, l
+
+    for step in range(steps):
+        b = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg, 128, 8, seed=0, step=step).items()}
+        params, state, loss = step_fn(params, state, b)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    ck.save(BENCH_DIR, steps, params, meta={"loss": float(loss)})
+    return cfg, model, params
+
+
+@lru_cache(maxsize=1)
+def calibrated_taps():
+    cfg, model, params = trained_model()
+    taps = calibrate(model, params,
+                     calibration_batches(cfg, n_seqs=16, seq_len=128,
+                                         batch=4))
+    return taps
+
+
+def layer_cases():
+    """-> list of (name, W (d_out, d_in) np, stats) for every transform
+    group of every layer (the 'linear layers of the architecture')."""
+    cfg, model, params = trained_model()
+    taps = calibrated_taps()
+    from repro.core.pipeline import layer_groups
+    cases = []
+    for g in layer_groups(cfg):
+        for i in range(cfg.n_layers):
+            tap = f"layers.{i}.{g.tap}"
+            ws = [np.asarray(params[g.scope][name][i]).T
+                  for name in g.weights]          # (d_out, d_in) each
+            w = np.concatenate(ws, axis=0)
+            cases.append((f"L{i}.{g.tap}", w, taps[tap]))
+    return cases
+
+
+def timer(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.time() - t0) / iters * 1e6, out  # us/call
+
+
+def emit(name: str, us: float, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,38 @@
+"""Fig. 3: SQNR vs (b_w, b_x) grid — horizontal/vertical 24 dB shifts per
+4 bits and the worst-component law (§2.1: overall SQNR tracks min side)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, layer_cases, timer
+from repro.core import sqnr as S
+from repro.core.quantizers import act_spec, weight_spec
+
+
+def run() -> dict:
+    name, w, stats = layer_cases()[0]
+    x = jnp.asarray(stats.sample_matrix()[:1024])
+    wj = jnp.asarray(w)
+    grid = {}
+    for bw in (4, 6, 8):
+        for bx in (4, 6, 8):
+            grid[(bw, bx)] = float(S.db(S.sqnr_quantized_layer(
+                wj, x, weight_spec(bw, range_p=None), act_spec(bx))))
+    dbit_w = np.mean([grid[(8, bx)] - grid[(4, bx)] for bx in (8,)])
+    dbit_x = np.mean([grid[(bw, 8)] - grid[(bw, 4)] for bw in (8,)])
+    return {"grid": {f"W{k[0]}A{k[1]}": v for k, v in grid.items()},
+            "shift_w_4bits_db": float(dbit_w),
+            "shift_x_4bits_db": float(dbit_x)}
+
+
+def main() -> None:
+    us, out = timer(run, iters=1)
+    emit("fig3_bitwidth", us,
+         f"W+4b={out['shift_w_4bits_db']:.1f}dB "
+         f"A+4b={out['shift_x_4bits_db']:.1f}dB "
+         f"W4A4={out['grid']['W4A4']:.1f}dB W8A8={out['grid']['W8A8']:.1f}dB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig. 4: concentration of weights/activations per layer under
+{none, channel-scale, hadamard, CAT}; reference lines: Normal/Laplace."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, layer_cases, timer
+from repro.core import sqnr as S
+from repro.core import transforms as T
+from repro.core.quantizers import act_spec, weight_spec
+
+
+def _concentrations(w, x):
+    cw = float(S.db(S.concentration_weight(w, weight_spec(4, range_p=None))))
+    cx = float(S.db(S.concentration_act(x, act_spec(4))))
+    return cw, cx
+
+
+def run() -> dict:
+    out = {k: {"cw": [], "cx": []}
+           for k in ("none", "channel", "hadamard", "cat")}
+    rng = np.random.default_rng(0)
+    for name, w, stats in layer_cases():
+        x = jnp.asarray(stats.sample_matrix()[:1024])
+        wj = jnp.asarray(w)
+        sw = wj.T @ wj
+        sx = jnp.asarray(stats.sigma, jnp.float32)
+        ts = {
+            "none": T.Identity(),
+            "channel": T.make_smoothquant(
+                jnp.asarray(stats.absmax, jnp.float32),
+                jnp.max(jnp.abs(wj), axis=0)),
+            "hadamard": T.make_hadamard(w.shape[1], rng),
+            "cat": T.make_cat_block(sw, sx, k=64, hadamard=True, rng=rng),
+        }
+        for k, t in ts.items():
+            cw, cx = _concentrations(T.fuse_weight(t, wj), T.apply(t, x))
+            out[k]["cw"].append(cw)
+            out[k]["cx"].append(cx)
+    # gaussian reference for d channels: C ≈ E||x||²/E[r²]; r ≈ 2·max|x|
+    return {k: {"cw_mean": float(np.mean(v["cw"])),
+                "cx_mean": float(np.mean(v["cx"]))} for k, v in out.items()}
+
+
+def main() -> None:
+    us, out = timer(run, iters=1)
+    emit("fig4_concentration", us,
+         " ".join(f"{k}:cx={v['cx_mean']:.1f}dB/cw={v['cw_mean']:.1f}dB"
+                  for k, v in out.items()))
+
+
+if __name__ == "__main__":
+    main()

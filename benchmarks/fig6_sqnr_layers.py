@@ -1,0 +1,53 @@
+"""Fig. 6: joint W4A4 SQNR per layer under {none, channel, hadamard, CAT}
+vs the W6A6 no-transform reference (claim: CAT W4A4 rivals W6A6)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, layer_cases, timer
+from repro.core import sqnr as S
+from repro.core import transforms as T
+from repro.core.quantizers import act_spec, weight_spec
+
+
+def _joint(w, x, b=4):
+    return float(S.db(S.sqnr_quantized_layer(
+        w, x, weight_spec(b, range_p=None), act_spec(b))))
+
+
+def run() -> dict:
+    rows = {k: [] for k in ("none", "channel", "hadamard", "cat", "w6a6")}
+    rng = np.random.default_rng(0)
+    for name, w, stats in layer_cases():
+        x = jnp.asarray(stats.sample_matrix()[:1024])
+        wj = jnp.asarray(w)
+        sw = wj.T @ wj
+        sx = jnp.asarray(stats.sigma, jnp.float32)
+        rows["none"].append(_joint(wj, x))
+        rows["w6a6"].append(_joint(wj, x, b=6))
+        ts = {
+            "channel": T.make_smoothquant(
+                jnp.asarray(stats.absmax, jnp.float32),
+                jnp.max(jnp.abs(wj), axis=0)),
+            "hadamard": T.make_hadamard(w.shape[1], rng),
+            "cat": T.make_cat_block(sw, sx, k=64, hadamard=True, rng=rng),
+        }
+        for k, t in ts.items():
+            rows[k].append(_joint(T.fuse_weight(t, wj), T.apply(t, x)))
+    out = {k: float(np.mean(v)) for k, v in rows.items()}
+    out["cat_vs_hadamard_db"] = out["cat"] - out["hadamard"]
+    out["cat_vs_w6a6_db"] = out["cat"] - out["w6a6"]
+    return out
+
+
+def main() -> None:
+    us, out = timer(run, iters=1)
+    emit("fig6_sqnr_layers", us,
+         f"none={out['none']:.1f} ch={out['channel']:.1f} "
+         f"had={out['hadamard']:.1f} cat={out['cat']:.1f} "
+         f"w6a6={out['w6a6']:.1f}dB cat-had={out['cat_vs_hadamard_db']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference, plus the
+jnp serving-path ops that the dry-run lowers. On CPU the interesting
+number is the REFERENCE path µs (interpret mode is a correctness
+simulator, not a perf proxy); TPU wall-clock comes from the roofline.
+Also derives per-op arithmetic intensity for the kernel BlockSpec story.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timer
+from repro.core.hadamard import hadamard_factors
+from repro.kernels import ops, ref
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    toks, d, d_out = 512, 1024, 768
+    ha, hb = map(lambda h: jnp.asarray(h, jnp.float32), hadamard_factors(d))
+    sign = jnp.asarray(rng.choice([-1.0, 1.0], d), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((toks, d)), jnp.float32)
+
+    f = jax.jit(lambda x: ref.hadamard_transform(x, ha, hb, sign))
+    us, _ = timer(f, x, warmup=2, iters=10)
+    flops = 2 * toks * d * (ha.shape[0] + hb.shape[0])
+    emit("kernel_hadamard_ref_jnp", us,
+         f"gflops={flops/us/1e3:.2f} d={d} toks={toks}")
+
+    us, _ = timer(lambda x: ops.hadamard(x, ha, hb, sign, interpret=True),
+                  x, warmup=1, iters=2)
+    emit("kernel_hadamard_pallas_interpret", us, "correctness-path")
+
+    f = jax.jit(lambda x: ref.dynamic_quant(x, bits=4))
+    us, _ = timer(f, x, warmup=2, iters=10)
+    emit("kernel_dynquant_ref_jnp", us,
+         f"gbps={x.size*4/us/1e3:.2f}")
+
+    qx = jnp.asarray(rng.integers(-8, 8, (toks, d)), jnp.int8)
+    qw = jnp.asarray(rng.integers(-8, 8, (d, d_out)), jnp.int8)
+    sx = jnp.asarray(rng.uniform(0.01, 0.1, (toks, 1)), jnp.float32)
+    zx = jnp.zeros((toks, 1), jnp.float32)
+    sw = jnp.asarray(rng.uniform(0.01, 0.1, (1, d_out)), jnp.float32)
+    f = jax.jit(lambda *a: ref.quant_matmul(*a))
+    us, _ = timer(f, qx, sx, zx, qw, sw, warmup=2, iters=10)
+    emit("kernel_qmatmul_ref_jnp", us,
+         f"gflops={2*toks*d*d_out/us/1e3:.2f}")
+
+    blocks = jnp.asarray(rng.standard_normal((d // 64, 64, 64)) / 8,
+                         jnp.float32)
+    f = jax.jit(lambda x: ref.block_diag_matmul(x, blocks))
+    us, _ = timer(f, x, warmup=2, iters=10)
+    emit("kernel_blockdiag_ref_jnp", us,
+         f"gflops={2*toks*d*64/us/1e3:.2f}")
+
+    # VMEM working-set accounting for the chosen BlockSpecs (DESIGN.md §3)
+    tm = 256
+    vmem_had = (tm * d * 4 * 2 + ha.size * 4 + hb.size * 4) / 2**20
+    vmem_qmm = (256 * 512 + 512 * 256 + 256 * 256 * 4) / 2**20
+    emit("kernel_vmem_budget", 0.0,
+         f"hadamard={vmem_had:.1f}MiB qmatmul={vmem_qmm:.2f}MiB (<16MiB)")
+
+
+if __name__ == "__main__":
+    main()

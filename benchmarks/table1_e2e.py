@@ -1,0 +1,58 @@
+"""Table 1: end-to-end quantized model quality.
+
+{RTN, GPTQ} × {none, SmoothQuant, QuaRot(=Hadamard), CAT(block)} at W4A4
+(+ KV8), on the trained bench LM; metric is held-out CE/ppl delta vs fp
+(the offline analogue of WikiText ppl — no pretrained weights offline).
+Paper structure to confirm: CAT ≤ QuaRot ≤ SmoothQuant ≤ none; GPTQ helps
+the weak transforms most.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import bench_cfg, emit, timer, trained_model
+from repro.core.pipeline import QuantizeConfig, eval_quantized, \
+    quantize_model
+from repro.data import calibration_batches, make_batch
+
+TRANSFORMS = ("none", "smoothquant", "hadamard", "cat")
+
+
+def run(seeds=(0, 1)) -> dict:
+    """W4A4 (the paper's headline) is near-lossless on our bench LM for
+    every method — the discriminating setting here is W3A3, where the
+    transform ordering emerges (reported for both)."""
+    cfg, model, params = trained_model()
+    out: dict = {}
+    for bits in (4, 3):
+        for method in ("rtn", "gptq"):
+            for tr in TRANSFORMS:
+                deltas = []
+                for seed in seeds:
+                    calib = calibration_batches(cfg, n_seqs=16, seq_len=128,
+                                                batch=4)
+                    qcfg = QuantizeConfig(w_bits=bits, a_bits=bits,
+                                          w_method=method, transform=tr,
+                                          cat_block=64, seed=seed)
+                    qp = quantize_model(model, params, qcfg, calib)
+                    ev = eval_quantized(
+                        model, params, qp,
+                        [make_batch(cfg, 256, 4, seed=500 + seed)])
+                    deltas.append(ev["delta"])
+                out[f"w{bits}a{bits}/{method}/{tr}"] = {
+                    "ce_delta_mean": float(np.mean(deltas)),
+                    "ce_delta_std": float(np.std(deltas)),
+                }
+    return out
+
+
+def main() -> None:
+    us, out = timer(run, iters=1)
+    parts = [f"{k}={v['ce_delta_mean']:+.3f}±{v['ce_delta_std']:.3f}"
+             for k, v in out.items()]
+    emit("table1_e2e", us, " ".join(parts))
+
+
+if __name__ == "__main__":
+    main()

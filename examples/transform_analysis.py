@@ -1,0 +1,60 @@
+"""Reproduce the paper's Figures 4/5/6 analysis as printed tables:
+per-layer concentration, alignment (vs optimum), and joint SQNR under
+{none, SmoothQuant, Hadamard, CAT}.
+
+    PYTHONPATH=src python examples/transform_analysis.py
+"""
+import sys
+sys.path.insert(0, ".")
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import layer_cases
+from repro.core import sqnr as S
+from repro.core import transforms as T
+from repro.core.quantizers import act_spec, weight_spec
+
+
+def main():
+    rng = np.random.default_rng(0)
+    hdr = (f"{'layer':16s} | {'C(x) dB':>24s} | {'A dB':>31s} | "
+           f"{'W4A4 SQNR dB':>31s}")
+    sub = (f"{'':16s} | {'none':>7s} {'had':>7s} {'cat':>7s} | "
+           f"{'none':>7s} {'cat':>7s} {'A*':>7s} {'had-none':>7s} | "
+           f"{'none':>7s} {'had':>7s} {'cat':>7s} {'w6a6':>7s}")
+    print(hdr); print(sub); print("-" * len(sub))
+    for name, w, stats in layer_cases():
+        x = jnp.asarray(stats.sample_matrix()[:768])
+        wj = jnp.asarray(w)
+        sw, sx = wj.T @ wj, jnp.asarray(stats.sigma, jnp.float32)
+        had = T.make_hadamard(w.shape[1], rng)
+        cat = T.make_cat_block(sw, sx, k=64, hadamard=True, rng=rng)
+
+        def cx(t):
+            return float(S.db(S.concentration_act(T.apply(t, x),
+                                                  act_spec(4))))
+
+        def al(t):
+            return float(S.db(S.alignment(T.fuse_weight(t, wj),
+                                          T.apply(t, x))))
+
+        def joint(t, b=4):
+            return float(S.db(S.sqnr_quantized_layer(
+                T.fuse_weight(t, wj), T.apply(t, x),
+                weight_spec(b, range_p=None), act_spec(b))))
+
+        astar = float(S.db(S.alignment_optimal(wj, sx)))
+        i = T.Identity()
+        print(f"{name:16s} | {cx(i):7.2f} {cx(had):7.2f} {cx(cat):7.2f} | "
+              f"{al(i):7.2f} {al(cat):7.2f} {astar:7.2f} "
+              f"{al(had)-al(i):7.3f} | "
+              f"{joint(i):7.2f} {joint(had):7.2f} {joint(cat):7.2f} "
+              f"{joint(i, 6):7.2f}")
+    print("\nClaims to observe: had-none column == 0 (rotation invariance);"
+          "\ncat <= A*; cat SQNR > had SQNR; cat W4A4 approaches w6a6.")
+
+
+if __name__ == "__main__":
+    main()

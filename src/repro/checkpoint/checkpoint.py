@@ -1,0 +1,141 @@
+"""Shard-aware checkpointing without external deps.
+
+Layout:  <dir>/step_<N>/
+           manifest.json      — step, flat key list, dtypes/shapes, meta
+           <group>.npz        — flattened param arrays (host shards)
+
+On a real multi-host cluster each process writes only its addressable
+shards (key-sliced by process index); restore device_puts with the target
+mesh's NamedSharding — which also implements *elastic* restarts onto a
+different mesh size (arrays are stored unsharded per host group).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+_NATIVE_KINDS = set("fiub?c")
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def walk(path, leaf):
+        key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in path)
+        flat[key] = np.asarray(leaf)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(walk, tree)
+    return flat
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bfloat16 etc.) — ship raw bytes; the
+    manifest carries the true dtype/shape for decode."""
+    if arr.dtype.kind in _NATIVE_KINDS:
+        return arr
+    return np.ascontiguousarray(arr).view(np.uint8)
+
+
+def _decode(raw: np.ndarray, dtype: str, shape) -> np.ndarray:
+    want = np.dtype(dtype)
+    if raw.dtype.kind in _NATIVE_KINDS and raw.dtype == want:
+        return raw
+    return raw.view(want).reshape(shape)
+
+
+def save(ckpt_dir: str, step: int, params, opt_state=None,
+         meta: Optional[dict] = None) -> str:
+    """Atomic save (write to tmp, rename)."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_ckpt_")
+    groups = {"params": params}
+    if opt_state is not None:
+        groups["opt_state"] = opt_state
+    manifest: dict[str, Any] = {"step": step, "meta": meta or {},
+                                "groups": {}}
+    for gname, tree in groups.items():
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, f"{gname}.npz"),
+                 **{k: _encode(v) for k, v in flat.items()})
+        manifest["groups"][gname] = {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in flat.items()}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int], like_params,
+            like_opt_state=None, shardings=None):
+    """Restore into the structure of `like_*` (treedefs must match).
+    `shardings`: optional {"params": tree, "opt_state": tree} of
+    NamedShardings — device_puts each leaf (elastic re-mesh path)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoints under {ckpt_dir}"
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def load_group(gname, like, shard_tree):
+        data = np.load(os.path.join(d, f"{gname}.npz"))
+        leaves_paths = []
+
+        def collect(path, leaf):
+            key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", e)))
+                            for e in path)
+            leaves_paths.append(key)
+            return leaf
+
+        jax.tree_util.tree_map_with_path(collect, like)
+        flat_shards = (jax.tree.leaves(shard_tree) if shard_tree is not None
+                       else [None] * len(leaves_paths))
+        info = manifest["groups"][gname]
+        arrays = []
+        for key, sh in zip(leaves_paths, flat_shards):
+            arr = _decode(data[key], info[key]["dtype"],
+                          tuple(info[key]["shape"]))
+            arrays.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+        return jax.tree.unflatten(jax.tree.structure(like), arrays)
+
+    shardings = shardings or {}
+    params = load_group("params", like_params, shardings.get("params"))
+    out = {"step": manifest["step"], "params": params,
+           "meta": manifest["meta"]}
+    if like_opt_state is not None:
+        out["opt_state"] = load_group("opt_state", like_opt_state,
+                                      shardings.get("opt_state"))
+    return out
+
+
+def prune_old(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,10 @@
+"""RWKV-6 (Finch) 7B [arXiv:2404.05892]: attention-free, data-dependent
+per-channel decay linear attention + token shift."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, head_dim=64,
+    d_ff=14336, vocab=65_536,
+    ssm_state=64, ssm_heads=64,
+)

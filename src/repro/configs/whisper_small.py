@@ -1,0 +1,11 @@
+"""Whisper small [arXiv:2212.04356]: enc-dec, conv frontend STUBBED —
+input_specs() provides precomputed frame embeddings (1500, d_model)."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="encdec",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab=51_865,
+    n_enc_layers=12, enc_seq=1500,
+    act="gelu", tie_embeddings=True,
+)

@@ -1,0 +1,11 @@
+"""Zamba2 7B [arXiv:2411.15242]: Mamba2 backbone + shared attention block
+invoked periodically (hybrid). 81 mamba layers, shared attn every 6."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, head_dim=112,
+    d_ff=14336, vocab=32_000,
+    ssm_state=64, ssm_heads=56,   # d_inner = 2*d_model, 64-wide heads
+    attn_every=6,
+)

@@ -1,0 +1,5 @@
+"""repro.core — the paper's contribution: the Concentration-Alignment
+quantization framework (SQNR decomposition, CAT transforms, calibration,
+GPTQ/RTN weight solvers, and the end-to-end PTQ pipeline).
+"""
+from . import cat, gptq, hadamard, qlinear, quantizers, sqnr, transforms  # noqa: F401

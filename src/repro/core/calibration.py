@@ -1,0 +1,94 @@
+"""Calibration: run the model unrolled on a small calibration set and
+collect, per tap point (layer-group input):
+
+  * Σ_x = E[xxᵀ]  (drives CAT + GPTQ)
+  * E[x²], per-channel absmax (drives SmoothQuant / diagnostics)
+  * a bounded reservoir of raw rows (drives SQNR evaluation benchmarks)
+
+The unrolled (eager) forward is the standard PTQ pattern — calibration is
+an offline, once-per-model cost; models run layer-by-layer so activations
+can be observed without retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+from .cat import CovAccumulator
+
+
+@dataclasses.dataclass
+class TapStats:
+    cov: CovAccumulator
+    samples: list
+    max_sample_rows: int = 2048
+
+    def update(self, x: np.ndarray) -> None:
+        self.cov.update(x)
+        have = sum(s.shape[0] for s in self.samples)
+        if have < self.max_sample_rows:
+            take = min(self.max_sample_rows - have, x.shape[0])
+            idx = np.linspace(0, x.shape[0] - 1, take).astype(int)
+            self.samples.append(x[idx].astype(np.float32))
+
+    @property
+    def sigma(self) -> np.ndarray:
+        return self.cov.cov()
+
+    @property
+    def absmax(self) -> np.ndarray:
+        return self.cov.amax
+
+    @property
+    def mean_sq(self) -> np.ndarray:
+        return self.cov.mean_sq()
+
+    def sample_matrix(self) -> np.ndarray:
+        return np.concatenate(self.samples, axis=0)
+
+
+class Taps:
+    """Passed through model forward (unroll mode); collects named stats."""
+
+    def __init__(self, max_sample_rows: int = 2048,
+                 max_rows_per_call: int = 4096):
+        self.stats: Dict[str, TapStats] = {}
+        self.max_sample_rows = max_sample_rows
+        self.max_rows_per_call = max_rows_per_call
+
+    def record(self, name: str, x) -> None:
+        arr = np.asarray(x, dtype=np.float32).reshape(-1, x.shape[-1])
+        if arr.shape[0] > self.max_rows_per_call:
+            idx = np.linspace(0, arr.shape[0] - 1,
+                              self.max_rows_per_call).astype(int)
+            arr = arr[idx]
+        st = self.stats.get(name)
+        if st is None:
+            st = TapStats(CovAccumulator(arr.shape[1]), [],
+                          self.max_sample_rows)
+            self.stats[name] = st
+        st.update(arr)
+
+    def __getitem__(self, name: str) -> TapStats:
+        return self.stats[name]
+
+    def names(self):
+        return sorted(self.stats)
+
+
+def calibrate(model, params, batches: Iterable[dict],
+              taps: Optional[Taps] = None) -> Taps:
+    """Run the model unrolled over calibration batches, collecting taps."""
+    import jax.numpy as jnp
+    taps = taps or Taps()
+    for batch in batches:
+        kw = {}
+        if "enc_embed" in batch:
+            kw["enc_embed"] = jnp.asarray(batch["enc_embed"])
+        if "patch_embed" in batch:
+            kw["extra_embed"] = jnp.asarray(batch["patch_embed"])
+        model.forward(params, jnp.asarray(batch["tokens"]), taps=taps,
+                      unroll=True, **kw)
+    return taps

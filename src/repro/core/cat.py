@@ -1,0 +1,168 @@
+"""CAT: Concentration-Alignment Transforms (paper Section 4).
+
+The alignment-optimal invertible transform for a linear layer with weight
+autocorrelation Σ_w = WᵀW and activation autocorrelation Σ_x = E[xxᵀ] is
+
+    M̂ = (Σ_w # Σ_x⁻¹)^(1/2)
+
+where # is the matrix geometric mean (Pusz & Woronowicz 1975):
+
+    A # B = A^(1/2) (A^(-1/2) B A^(-1/2))^(1/2) A^(1/2).
+
+M̂ satisfies  M̂ Σ_x M̂ = M̂⁻¹ Σ_w M̂⁻¹ = (Σ_x^(-1/2) Σ_w Σ_x^(-1/2))^(1/2)
+(eq. 8) — it maps activation and weight variation into the same space.
+
+The practical transform is the block-diagonal approximation composed with
+a Hadamard rotation (rotations leave alignment invariant but restore
+concentration):   T̂ᵏ_block = H · M̂ᵏ_block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _sym(a):
+    return (a + a.T) / 2.0
+
+
+def spd_power(a: jnp.ndarray, p: float, eps: float = 1e-9) -> jnp.ndarray:
+    """A^p for symmetric PSD A via eigendecomposition, with eigenvalue floor
+    eps * max(eig) for numerical robustness on rank-deficient Σ."""
+    a = _sym(a.astype(jnp.float64) if a.dtype == jnp.float64 else a.astype(jnp.float32))
+    lam, q = jnp.linalg.eigh(a)
+    floor = jnp.maximum(jnp.max(lam), 0.0) * eps + 1e-30
+    lam = jnp.maximum(lam, floor)
+    return _sym((q * lam**p) @ q.T)
+
+
+def geometric_mean(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Matrix geometric mean A # B for SPD A, B."""
+    a_h = spd_power(a, 0.5)
+    a_mh = spd_power(a, -0.5)
+    mid = spd_power(a_mh @ _sym(b) @ a_mh, 0.5)
+    return _sym(a_h @ mid @ a_h)
+
+
+def cat_optimal(sigma_w: jnp.ndarray, sigma_x: jnp.ndarray) -> jnp.ndarray:
+    """M̂ = (Σ_w # Σ_x⁻¹)^(1/2) — the full-rank alignment-optimal transform.
+
+    Equivalent closed form used here (numerically friendlier):
+        M̂² = Σ_x^(-1/2) (Σ_x^(1/2) Σ_w Σ_x^(1/2))^(1/2) Σ_x^(-1/2)
+    which is exactly Σ_w # Σ_x⁻¹.
+    """
+    x_h = spd_power(sigma_x, 0.5)
+    x_mh = spd_power(sigma_x, -0.5)
+    mid = spd_power(x_h @ _sym(sigma_w) @ x_h, 0.5)
+    m2 = _sym(x_mh @ mid @ x_mh)
+    return spd_power(m2, 0.5)
+
+
+def cat_diagonal(sigma_w: jnp.ndarray, sigma_x: jnp.ndarray) -> jnp.ndarray:
+    """k=1 closed form: M̂¹ = Diag(m), m_i = (Σw_ii / Σx_ii)^(1/4).
+
+    Derivation: minimizing ‖W M⁻¹‖_F² · E‖Mx‖² = (Σᵢ aᵢ/mᵢ²)(Σᵢ bᵢ mᵢ²)
+    with aᵢ = Σⱼw²ⱼᵢ (column norms, diag of Σ_w) and bᵢ = E[xᵢ²] gives
+    mᵢ ∝ (aᵢ/bᵢ)^(1/4) — exactly the scalar matrix geometric mean
+    (a # 1/b)^(1/2) = (a/b)^(1/4), consistent with `cat_optimal` on
+    diagonal inputs. (The paper's printed k=1 formula
+    mᵢ = sqrt(E[xᵢ²]/Σⱼw²ᵢⱼ) appears to carry a typo — the inverse ratio —
+    since it would *amplify* high-variance channels; tests verify our form
+    matches `cat_optimal` restricted to diagonals.)
+    """
+    dw = jnp.diagonal(sigma_w)
+    dx = jnp.diagonal(sigma_x)
+    m = (dw / jnp.maximum(dx, 1e-30)) ** 0.25
+    return jnp.diag(m)
+
+
+def block_slices(d: int, k: int):
+    """Partition [0, d) into ceil(d/k) contiguous blocks (last may be short)."""
+    return [(i, min(i + k, d)) for i in range(0, d, k)]
+
+
+def cat_block(sigma_w: jnp.ndarray, sigma_x: jnp.ndarray, k: int = 128) -> jnp.ndarray:
+    """Block-diagonal M̂ᵏ_block: each k×k diagonal block of (Σ_w, Σ_x) gets
+    its own optimal transform. Returns the full (d, d) block-diag matrix."""
+    d = sigma_w.shape[0]
+    if k >= d:
+        return cat_optimal(sigma_w, sigma_x)
+    if k == 1:
+        return cat_diagonal(sigma_w, sigma_x)
+    blocks = []
+    for lo, hi in block_slices(d, k):
+        blocks.append(cat_optimal(sigma_w[lo:hi, lo:hi], sigma_x[lo:hi, lo:hi]))
+    return jax.scipy.linalg.block_diag(*blocks)
+
+
+def cat_block_stacked(sigma_w: jnp.ndarray, sigma_x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Same as cat_block but returns (d//k, k, k) stacked blocks (the shape
+    the block-diag Pallas kernel and the serving path consume). Requires
+    k | d."""
+    d = sigma_w.shape[0]
+    assert d % k == 0, f"block size {k} must divide {d}"
+    n = d // k
+    sw = _extract_diag_blocks(sigma_w, n, k)
+    sx = _extract_diag_blocks(sigma_x, n, k)
+    return jax.vmap(cat_optimal)(sw, sx)
+
+
+def _extract_diag_blocks(a: jnp.ndarray, n: int, k: int) -> jnp.ndarray:
+    a = a.reshape(n, k, n, k)
+    return jax.vmap(lambda i: a[i, :, i, :])(jnp.arange(n))
+
+
+def blocks_to_dense(blocks: jnp.ndarray) -> jnp.ndarray:
+    return jax.scipy.linalg.block_diag(*[blocks[i] for i in range(blocks.shape[0])])
+
+
+def apply_block_diag(x: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ Mᵀ_blockdiag for x (..., d), blocks (n, k, k) — einsum form.
+    (The Pallas kernel in repro.kernels.block_matmul is the TPU fast path.)
+
+    Each output block_i = x_block_i @ blocks_i^T, i.e. y[..., i, a] =
+    Σ_b blocks[i, a, b] x[..., i, b]   — matching y = M x for column vec x.
+    """
+    n, k, _ = blocks.shape
+    shape = x.shape
+    xb = x.reshape(*shape[:-1], n, k)
+    yb = jnp.einsum("...nk,nak->...na", xb, blocks)
+    return yb.reshape(shape)
+
+
+def inv_blocks(blocks: jnp.ndarray) -> jnp.ndarray:
+    return jax.vmap(jnp.linalg.inv)(blocks.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Σ_x estimation (streaming, calibration-time)
+# ---------------------------------------------------------------------------
+
+class CovAccumulator:
+    """Streaming E[xxᵀ] (autocorrelation, not centered) + E[x²] + count.
+
+    Host-side numpy accumulation in float64 — calibration sets are small
+    (128 × 2048 tokens in the paper) and this runs once, offline.
+    """
+
+    def __init__(self, d: int):
+        self.d = d
+        self.sigma = np.zeros((d, d), dtype=np.float64)
+        self.sq = np.zeros((d,), dtype=np.float64)
+        self.amax = np.zeros((d,), dtype=np.float64)
+        self.n = 0
+
+    def update(self, x) -> None:
+        x = np.asarray(x, dtype=np.float64).reshape(-1, self.d)
+        self.sigma += x.T @ x
+        self.sq += (x**2).sum(0)
+        self.amax = np.maximum(self.amax, np.abs(x).max(0))
+        self.n += x.shape[0]
+
+    def cov(self) -> np.ndarray:
+        assert self.n > 0, "no calibration data accumulated"
+        return self.sigma / self.n
+
+    def mean_sq(self) -> np.ndarray:
+        return self.sq / self.n

@@ -1,0 +1,77 @@
+"""GPTQ weight quantization (Frantar et al. 2022) in pure JAX.
+
+Column-sequential error-compensated rounding with the inverse-Hessian
+Cholesky recursion. This is calibration-time work (runs once per layer),
+so we keep it in jnp with a `lax.fori_loop` rather than a Pallas kernel
+(see DESIGN.md §3 — inherently serial per column).
+
+H = E[xxᵀ] (the Σ_x already collected for CAT calibration) serves as the
+Hessian proxy; per-output-channel symmetric scales follow the paper's
+L2.4 range estimation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quantizers import QuantSpec, compute_scale_zp, weight_spec
+
+
+def _damped_hinv_chol(sigma_x: jnp.ndarray, damp: float = 0.01) -> jnp.ndarray:
+    """Upper Cholesky factor of H⁻¹ with multiplicative damping."""
+    d = sigma_x.shape[0]
+    h = sigma_x.astype(jnp.float32)
+    mean_diag = jnp.mean(jnp.diagonal(h))
+    h = h + (damp * mean_diag + 1e-8) * jnp.eye(d, dtype=jnp.float32)
+    hinv = jnp.linalg.inv(h)
+    hinv = (hinv + hinv.T) / 2.0
+    # Upper factor U with H⁻¹ = Uᵀ U  (cholesky returns lower L, H⁻¹ = L Lᵀ)
+    l = jnp.linalg.cholesky(hinv)
+    return l.T
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def gptq_quantize(w: jnp.ndarray, sigma_x: jnp.ndarray,
+                  spec: QuantSpec = None, damp: float = 0.01):
+    """Quantize W (d_out, d_in) minimizing ||(W - Ŵ)X||² column-by-column.
+
+    Returns (q int codes (d_out, d_in), scale (d_out, 1)).
+    """
+    if spec is None:
+        spec = weight_spec(4)
+    w = w.astype(jnp.float32)
+    scale, _ = compute_scale_zp(w, spec)  # (d_out, 1), symmetric
+    u = _damped_hinv_chol(sigma_x, damp)  # (d_in, d_in) upper
+    d_in = w.shape[1]
+
+    def body(i, carry):
+        w_work, q_acc = carry
+        col = w_work[:, i]
+        q = jnp.clip(jnp.round(col / scale[:, 0]), spec.qmin, spec.qmax)
+        err = (col - q * scale[:, 0]) / u[i, i]
+        # propagate to not-yet-quantized columns (mask keeps shapes static)
+        row = u[i, :]  # zeros below the diagonal handled by the mask
+        mask = (jnp.arange(d_in) > i).astype(w_work.dtype)
+        w_work = w_work - jnp.outer(err, row * mask)
+        q_acc = q_acc.at[:, i].set(q)
+        return (w_work, q_acc)
+
+    q0 = jnp.zeros_like(w)
+    _, q = jax.lax.fori_loop(0, d_in, body, (w, q0))
+    return q.astype(jnp.int8 if spec.bits <= 8 else jnp.int32), scale
+
+
+def gptq_dequant(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def rtn_quantize(w: jnp.ndarray, spec: QuantSpec = None):
+    """Round-to-nearest baseline with the same scale estimation."""
+    if spec is None:
+        spec = weight_spec(4)
+    w = w.astype(jnp.float32)
+    scale, _ = compute_scale_zp(w, spec)
+    q = jnp.clip(jnp.round(w / scale), spec.qmin, spec.qmax)
+    return q.astype(jnp.int8 if spec.bits <= 8 else jnp.int32), scale

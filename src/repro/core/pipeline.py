@@ -1,0 +1,251 @@
+"""End-to-end PTQ pipeline (the paper's Section 6 setup as a system):
+
+  calibrate -> build per-group transforms -> fuse T⁻¹ into weights ->
+  quantize weights (RTN / GPTQ, L2.4 ranges) -> pack QLinear pytrees ->
+  the SAME model code now serves quantized (qlinear dispatch).
+
+Layer *groups* follow the paper: projections sharing an input activation
+(q/k/v; up/gate) share one transform — "treating the layer as a single
+linear layer with multiple output heads".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import transforms as T
+from .calibration import Taps, calibrate
+from .cat import cat_block_stacked
+from .gptq import gptq_quantize, rtn_quantize
+from .qlinear import QLinear, fuse_weight_in
+from .quantizers import weight_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """One transform group inside one (logical) layer."""
+    tap: str                 # tap suffix, e.g. "attn_in"
+    weights: tuple           # param names in params[<scope>], e.g. ("wq","wk","wv")
+    scope: str = "layers"    # which sub-tree the weights live in
+
+
+def layer_groups(cfg) -> List[GroupSpec]:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        mlp_in = ("wg", "wu") if cfg.gated_mlp else ("wu",)
+        return [GroupSpec("attn_in", ("wq", "wk", "wv")),
+                GroupSpec("o_in", ("wo",)),
+                GroupSpec("mlp_in", mlp_in),
+                GroupSpec("down_in", ("wd",))]
+    if fam == "moe":
+        return [GroupSpec("attn_in", ("wq", "wk", "wv")),
+                GroupSpec("o_in", ("wo",)),
+                GroupSpec("expert_in", ("we_g", "we_u")),
+                GroupSpec("down_in", ("we_d",))]
+    if fam == "ssm":  # rwkv6: decay lora stays fp (nonlinear path)
+        return [GroupSpec("attn_in", ("wr", "wk", "wv", "wg")),
+                GroupSpec("o_in", ("wo",)),
+                GroupSpec("mlp_in", ("ck",)),
+                GroupSpec("down_in", ("cv",))]
+    if fam == "hybrid":  # zamba2 mamba blocks; shared attn handled separately
+        return [GroupSpec("mamba_in", ("in_x", "in_z", "in_b", "in_c"),
+                          scope="mamba"),
+                GroupSpec("mamba_out_in", ("out_proj",), scope="mamba")]
+    if fam == "encdec":
+        return [GroupSpec("attn_in", ("wq", "wk", "wv")),
+                GroupSpec("cross_in", ("xq",)),
+                GroupSpec("mlp_in", ("wg", "wu")),
+                GroupSpec("down_in", ("wd",))]
+    raise ValueError(fam)
+
+
+def shared_groups(cfg) -> List[GroupSpec]:
+    """Groups whose weights are NOT layer-stacked (zamba2 shared block)."""
+    if cfg.family == "hybrid":
+        return [GroupSpec("attn_in", ("wq", "wk", "wv"), scope="shared_attn"),
+                GroupSpec("o_in", ("wo",), scope="shared_attn"),
+                GroupSpec("mlp_in", ("wg", "wu"), scope="shared_attn"),
+                GroupSpec("down_in", ("wd",), scope="shared_attn")]
+    return []
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizeConfig:
+    w_bits: int = 4
+    a_bits: int = 4
+    w_method: str = "rtn"            # rtn | gptq
+    transform: str = "cat"           # none|smoothquant|hadamard|rotation|cat|cat_nohad
+    cat_block: int = 0               # 0 => cfg.cat_block
+    smooth_alpha: float = 0.5
+    range_p: Optional[float] = 2.4
+    seed: int = 0
+
+
+def _sigma_w_of(ws: List[np.ndarray]) -> np.ndarray:
+    """Σ_w for a group: Σ over members of W Wᵀ in input-major form —
+    members are V (d_in, d_out), so Σ_w = Σ V Vᵀ (d_in × d_in)."""
+    d = ws[0].shape[-2] if ws[0].ndim == 3 else ws[0].shape[0]
+    sw = np.zeros((d, d), np.float64)
+    for v in ws:
+        v2 = np.asarray(v, np.float64)
+        if v2.ndim == 3:               # experts (E, d_in, d_out)
+            for e in range(v2.shape[0]):
+                sw += v2[e] @ v2[e].T
+        else:
+            sw += v2 @ v2.T
+    return sw
+
+
+def build_transform(qcfg: QuantizeConfig, cfg, stats, ws: List[np.ndarray],
+                    rng: np.random.Generator):
+    d = ws[0].shape[-2]
+    kind = qcfg.transform
+    if kind == "none":
+        return T.Identity()
+    if kind == "smoothquant":
+        wmax = np.max([np.abs(np.asarray(w, np.float64)).max(
+            axis=tuple(range(w.ndim - 1))) if w.ndim == 3
+            else np.abs(np.asarray(w)).max(axis=1) for w in ws], axis=0)
+        return T.make_smoothquant(jnp.asarray(stats.absmax, jnp.float32),
+                                  jnp.asarray(wmax, jnp.float32),
+                                  alpha=qcfg.smooth_alpha)
+    if kind == "hadamard":
+        return T.make_hadamard(d, rng)
+    if kind == "rotation":
+        return T.make_rotation(d, rng)
+    if kind in ("cat", "cat_nohad"):
+        k = qcfg.cat_block or cfg.cat_block
+        sw = jnp.asarray(_sigma_w_of(ws), jnp.float32)
+        sx = jnp.asarray(stats.sigma, jnp.float32)
+        return T.make_cat_block(sw, sx, k=min(k, d),
+                                hadamard=(kind == "cat"), rng=rng)
+    raise ValueError(kind)
+
+
+def _quantize_weight(v: jnp.ndarray, sigma_t: Optional[jnp.ndarray],
+                     qcfg: QuantizeConfig):
+    """v (d_in, d_out) [or (E, d_in, d_out)] -> (codes, scale (1, d_out))."""
+    spec = weight_spec(qcfg.w_bits, qcfg.range_p)
+    if v.ndim == 3:
+        fn = lambda vv: _quantize_weight(vv, sigma_t, qcfg)
+        codes, scales = jax.vmap(fn)(v)
+        return codes, scales
+    w = v.T  # (d_out, d_in) — quantizer convention
+    if qcfg.w_method == "gptq" and sigma_t is not None:
+        q, s = gptq_quantize(w, sigma_t, spec)
+    else:
+        q, s = rtn_quantize(w, spec)
+    return q.T, s.T  # codes (d_in, d_out), scale (1, d_out)
+
+
+def quantize_model(model, params, qcfg: QuantizeConfig,
+                   calib_batches) -> dict:
+    """Returns a new params pytree with quantizable linears replaced by
+    QLinear. Works for every arch family."""
+    cfg = model.cfg
+    taps = calibrate(model, params, calib_batches)
+    rng = np.random.default_rng(qcfg.seed)
+    qparams = jax.tree.map(lambda x: x, params)  # shallow copy
+
+    def quantize_group(scope_tree, group: GroupSpec, tap_name: str,
+                       layer_idx: Optional[int]):
+        stats = taps[tap_name]
+        ws = []
+        for name in group.weights:
+            w = scope_tree[name]
+            ws.append(np.asarray(w[layer_idx] if layer_idx is not None else w))
+        t = build_transform(qcfg, cfg, stats, ws, rng)
+        sigma_t = T.fuse_cov(t, jnp.asarray(stats.sigma, jnp.float32))
+        out = {}
+        for name, w_np in zip(group.weights, ws):
+            v = jnp.asarray(w_np, jnp.float32)
+            if v.ndim == 3:
+                vf = jax.vmap(lambda vv: fuse_weight_in(t, vv))(v)
+            else:
+                vf = fuse_weight_in(t, v)
+            codes, scale = _quantize_weight(vf, sigma_t, qcfg)
+            out[name] = QLinear(codes, scale, t, act_bits=qcfg.a_bits)
+        return out
+
+    # --- layer-stacked groups
+    n_layers = cfg.n_layers
+    for group in layer_groups(cfg):
+        scope = qparams[group.scope]
+        per_layer = []
+        for i in range(n_layers):
+            tap_name = (f"layers.{i}.{group.tap}" if group.scope != "mamba"
+                        else f"layers.{i}.{group.tap}")
+            per_layer.append(quantize_group(scope, group, tap_name, i))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+        for name in group.weights:
+            scope[name] = stacked[name]
+
+    # --- shared (non-stacked) groups: aggregate taps over invocation sites
+    for group in shared_groups(cfg):
+        scope = qparams[group.scope]
+        site_names = [n for n in taps.names()
+                      if n.startswith("shared.") and n.endswith(group.tap)]
+        merged = _merge_stats(taps, site_names)
+        ws = [np.asarray(scope[name]) for name in group.weights]
+        t = build_transform(qcfg, cfg, merged, ws, rng)
+        sigma_t = T.fuse_cov(t, jnp.asarray(merged.sigma, jnp.float32))
+        for name, w_np in zip(group.weights, ws):
+            vf = fuse_weight_in(t, jnp.asarray(w_np, jnp.float32))
+            codes, scale = _quantize_weight(vf, sigma_t, qcfg)
+            scope[name] = QLinear(codes, scale, t, act_bits=qcfg.a_bits)
+
+    # encoder layers (whisper): same groups, enc scope
+    if cfg.family == "encdec":
+        enc_groups = [GroupSpec("attn_in", ("wq", "wk", "wv"), "enc_layers"),
+                      GroupSpec("mlp_in", ("wg", "wu"), "enc_layers"),
+                      GroupSpec("down_in", ("wd",), "enc_layers")]
+        # encoder taps were only recorded for attn_in; quantize that group
+        scope = qparams["enc_layers"]
+        for group in enc_groups:
+            per_layer = []
+            ok = all(f"enc.{i}.{group.tap}" in taps.stats
+                     for i in range(cfg.n_enc_layers))
+            if not ok:
+                continue
+            for i in range(cfg.n_enc_layers):
+                per_layer.append(quantize_group(scope, group,
+                                                f"enc.{i}.{group.tap}", i))
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+            for name in group.weights:
+                scope[name] = stacked[name]
+
+    return qparams
+
+
+def _merge_stats(taps: Taps, names: List[str]):
+    assert names, "no taps recorded for shared group"
+    base = taps[names[0]]
+    if len(names) == 1:
+        return base
+    import copy
+    merged = copy.deepcopy(base)
+    for n in names[1:]:
+        st = taps[n]
+        merged.cov.sigma += st.cov.sigma
+        merged.cov.sq += st.cov.sq
+        merged.cov.amax = np.maximum(merged.cov.amax, st.cov.amax)
+        merged.cov.n += st.cov.n
+        merged.samples.extend(st.samples)
+    return merged
+
+
+def eval_quantized(model, params, qparams, eval_batches) -> dict:
+    """Held-out CE of fp vs quantized params (the Table-1 metric proxy)."""
+    losses_fp, losses_q = [], []
+    loss_fn = jax.jit(model.loss)
+    for batch in eval_batches:
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        losses_fp.append(float(loss_fn(params, b)[1]["ce"]))
+        losses_q.append(float(loss_fn(qparams, b)[1]["ce"]))
+    fp, q = float(np.mean(losses_fp)), float(np.mean(losses_q))
+    return {"ce_fp": fp, "ce_quant": q, "delta": q - fp,
+            "ppl_fp": float(np.exp(fp)), "ppl_quant": float(np.exp(q))}

@@ -1,0 +1,68 @@
+"""Quantized linear dispatch — the bridge between the PTQ pipeline and the
+model zoo.
+
+Model code calls ``dense(p, x)`` for every linear layer. ``p`` is either a
+raw jnp array ``V`` of shape (d_in, d_out) (fp path) or a ``QLinear``
+pytree (serving path): int8 weight codes + per-output-channel scales +
+an online activation transform + dynamic activation fake-quant. PTQ swaps
+the params pytree; the model code is identical.
+
+The jnp ops here are the *portable* path (and what the multi-pod dry-run
+lowers). ``repro.kernels.ops`` provides the Pallas TPU fast path with the
+same semantics (int8 MXU matmul with fused dequant epilogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transforms as T
+from .quantizers import QuantSpec, act_spec, fake_quant
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinear:
+    qweight: jnp.ndarray          # int8 codes, (d_in, d_out) [or stacked (L, ...)]
+    scale: jnp.ndarray            # f32, (1, d_out)
+    transform: Any                # transform pytree acting on the input dim
+    act_bits: int = 4             # static: dynamic per-token act quant bits (0 = off)
+
+
+jax.tree_util.register_dataclass(
+    QLinear, data_fields=["qweight", "scale", "transform"], meta_fields=["act_bits"]
+)
+
+
+def fuse_weight_in(t, v: jnp.ndarray) -> jnp.ndarray:
+    """Fuse T⁻¹ into an input-major weight V (d_in, d_out): V' = T⁻ᵀ V."""
+    return T.fuse_weight(t, v.T).T
+
+
+def dense(p, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
+    """y = x @ V (fp) or the quantized equivalent (transform -> dyn act
+    quant -> int8-weight matmul with dequant)."""
+    if isinstance(p, QLinear):
+        cd = compute_dtype or x.dtype
+        x = T.apply(p.transform, x)
+        if p.act_bits:
+            x = fake_quant(x, act_spec(p.act_bits))
+        w = p.qweight.astype(cd) * p.scale.astype(cd)
+        return x.astype(cd) @ w
+    cd = compute_dtype or x.dtype
+    return x @ p.astype(cd)
+
+
+def dense_params(p) -> jnp.ndarray:
+    """Materialize the effective fp weight of either param kind (analysis)."""
+    if isinstance(p, QLinear):
+        return p.qweight.astype(jnp.float32) * p.scale
+    return jnp.asarray(p, jnp.float32)
+
+
+def num_weight_bytes(p) -> int:
+    if isinstance(p, QLinear):
+        return p.qweight.size * p.qweight.dtype.itemsize + p.scale.size * 4
+    return p.size * p.dtype.itemsize

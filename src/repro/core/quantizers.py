@@ -1,0 +1,173 @@
+"""Uniform integer quantizers (the paper's Section 2 setting).
+
+Supports every axis of the paper's quantization setup:
+  * symmetric / asymmetric range
+  * static (calibrated) / dynamic (per-call) range estimation
+  * per-tensor / per-token (activations) / per-channel (weights) granularity
+  * fake-quant (quantize->dequantize in fp, used for analysis & training
+    numerics) and real int8 storage (used by the serving path)
+
+W4 is represented as int4-range values stored in int8 (TPU v5e has no
+native int4; values are exactly representable so accuracy is unaffected —
+see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Tiny epsilon guarding divide-by-zero on all-zero ranges.
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Declarative description of one quantizer."""
+
+    bits: int = 4
+    symmetric: bool = True
+    # Axis/axes that get *independent* quantization parameters.
+    # For per-token activations of shape (..., tokens, d): channel_axis=-1
+    # is REDUCED over, i.e. params are per leading index. We express it as
+    # the axes to reduce when estimating ranges.
+    per: str = "tensor"  # "tensor" | "token" | "channel"
+    dynamic: bool = True
+    # L_p norm-minimizing range search (GPTQ's L2.4 trick) — weights only.
+    range_p: Optional[float] = None
+    # Number of grid points for the L_p range search.
+    range_grid: int = 64
+
+    @property
+    def n_levels(self) -> int:
+        """N(b) = 2^b - 1 quantization intervals (paper notation)."""
+        return 2**self.bits - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.symmetric else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.symmetric else 2**self.bits - 1
+
+
+def _reduce_axes(x: jnp.ndarray, spec: QuantSpec) -> tuple:
+    if spec.per == "tensor":
+        return tuple(range(x.ndim))
+    # "token": params per row => reduce the last (feature) axis.
+    # "channel": params per output channel (row of W) => also reduce last.
+    return (x.ndim - 1,)
+
+
+def compute_scale_zp(x: jnp.ndarray, spec: QuantSpec):
+    """Range estimation -> (scale, zero_point). Keeps reduced dims (size 1)."""
+    axes = _reduce_axes(x, spec)
+    if spec.range_p is not None:
+        return _lp_optimal_scale(x, spec, axes)
+    if spec.symmetric:
+        amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+        scale = jnp.maximum(amax, _EPS) / spec.qmax
+        zp = jnp.zeros_like(scale)
+    else:
+        xmin = jnp.min(x, axis=axes, keepdims=True)
+        xmax = jnp.max(x, axis=axes, keepdims=True)
+        scale = jnp.maximum(xmax - xmin, _EPS) / spec.n_levels
+        zp = jnp.round(-xmin / scale)
+    return scale, zp
+
+
+def _lp_optimal_scale(x: jnp.ndarray, spec: QuantSpec, axes):
+    """Grid-search the clipping range minimizing E|x - Q(x)|^p (p=2.4 per
+    GPTQ / the paper's weight range estimation)."""
+    p = spec.range_p
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    amax = jnp.maximum(amax, _EPS)
+    fracs = jnp.linspace(0.35, 1.0, spec.range_grid)
+
+    def err_for(frac):
+        scale = amax * frac / spec.qmax
+        q = jnp.clip(jnp.round(x / scale), spec.qmin, spec.qmax)
+        err = jnp.abs(q * scale - x) ** p
+        return jnp.sum(err, axis=axes, keepdims=True)
+
+    errs = jax.vmap(err_for)(fracs)  # (grid, ...)
+    best = jnp.argmin(errs, axis=0)  # (...)
+    best_frac = fracs[best]
+    scale = amax * best_frac / spec.qmax
+    zp = jnp.zeros_like(scale)
+    return scale, zp
+
+
+def quantize(x: jnp.ndarray, spec: QuantSpec, scale=None, zp=None):
+    """-> (q int8/int16/int32 codes, scale, zp). Static params may be passed."""
+    if scale is None:
+        scale, zp = compute_scale_zp(x, spec)
+    if zp is None:
+        zp = jnp.zeros_like(scale)
+    q = jnp.round(x / scale + zp)
+    q = jnp.clip(q, spec.qmin, spec.qmax)
+    if spec.qmin >= -128 and spec.qmax <= 127:
+        store = jnp.int8
+    elif spec.qmin >= 0 and spec.qmax <= 255:
+        store = jnp.uint8
+    else:
+        store = jnp.int32
+    return q.astype(store), scale, zp
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray, dtype=jnp.float32):
+    return ((q.astype(jnp.float32) - zp) * scale).astype(dtype)
+
+
+def fake_quant(x: jnp.ndarray, spec: QuantSpec, scale=None, zp=None) -> jnp.ndarray:
+    """Quantize-dequantize in the input dtype (the analysis workhorse)."""
+    q, scale, zp = quantize(x, spec, scale, zp)
+    return dequantize(q, scale, zp, x.dtype)
+
+
+def quant_range(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """r(x) from the paper: the full quantized interval size.
+
+    Asymmetric: max - min. Symmetric: 2*max|x|. Per-token/channel: per row.
+    Returns shape with reduced dims squeezed out.
+    """
+    axes = _reduce_axes(x, spec)
+    if spec.symmetric:
+        r = 2.0 * jnp.max(jnp.abs(x), axis=axes)
+    else:
+        r = jnp.max(x, axis=axes) - jnp.min(x, axis=axes)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Paper defaults (Section 6 experimental setup)
+# ---------------------------------------------------------------------------
+
+def act_spec(bits: int = 4) -> QuantSpec:
+    """Activations: dynamic, per-token, asymmetric."""
+    return QuantSpec(bits=bits, symmetric=False, per="token", dynamic=True)
+
+
+def weight_spec(bits: int = 4, range_p: Optional[float] = 2.4) -> QuantSpec:
+    """Weights: static, per-channel, symmetric, L2.4 range estimation."""
+    return QuantSpec(bits=bits, symmetric=True, per="channel", dynamic=False,
+                     range_p=range_p)
+
+
+def kv_spec(bits: int = 8) -> QuantSpec:
+    """KV cache: dynamic per-token asymmetric (paper setup)."""
+    return QuantSpec(bits=bits, symmetric=False, per="token", dynamic=True)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def fake_quant_act(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    return fake_quant(x, act_spec(bits))
+
+
+@partial(jax.jit, static_argnames=("bits", "range_p"))
+def fake_quant_weight(w: jnp.ndarray, bits: int = 4, range_p=2.4) -> jnp.ndarray:
+    return fake_quant(w, weight_spec(bits, range_p))

@@ -1,0 +1,153 @@
+"""SQNR / Concentration / Alignment framework (paper Section 2).
+
+All quantities operate on a weight matrix ``W`` of shape (d_out, d_in) and
+a batch of activations ``X`` of shape (n, d_in) treated as samples from
+p(x). Expectations are empirical means over the n samples.
+
+Decibel convention: dB(v) = 10 log10(v).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quantizers import QuantSpec, act_spec, weight_spec, fake_quant, quant_range
+
+_EPS = 1e-30
+
+
+def db(v):
+    return 10.0 * jnp.log10(jnp.maximum(v, _EPS))
+
+
+def parallel(a, b):
+    """Harmonic sum a ∥ b = (1/a + 1/b)^-1 (Lemma 2.1)."""
+    return 1.0 / (1.0 / a + 1.0 / b)
+
+
+# ---------------------------------------------------------------------------
+# Measured SQNR (definition, eq. 1)
+# ---------------------------------------------------------------------------
+
+def sqnr_measured(W, X, Wq, Xq):
+    """SQNR(W̃x̃) = E||Wx||² / E||Wx - W̃x̃||²  with empirical E over rows of X."""
+    y = X @ W.T
+    yq = Xq @ Wq.T
+    sig = jnp.mean(jnp.sum(y.astype(jnp.float32) ** 2, axis=-1))
+    noise = jnp.mean(jnp.sum((y - yq).astype(jnp.float32) ** 2, axis=-1))
+    return sig / jnp.maximum(noise, _EPS)
+
+
+def sqnr_quantized_layer(W, X, wspec: QuantSpec, xspec: QuantSpec):
+    """Measured joint SQNR under fake quantization of both operands."""
+    return sqnr_measured(W, X, fake_quant(W, wspec), fake_quant(X, xspec))
+
+
+def sqnr_act_only(W, X, xspec: QuantSpec):
+    return sqnr_measured(W, X, W, fake_quant(X, xspec))
+
+
+def sqnr_weight_only(W, X, wspec: QuantSpec):
+    return sqnr_measured(W, X, fake_quant(W, wspec), X)
+
+
+# ---------------------------------------------------------------------------
+# The three factors (Lemmas 2.2, 2.3)
+# ---------------------------------------------------------------------------
+
+def n_levels(bits: int) -> float:
+    return float(2**bits - 1)
+
+
+def concentration_act(X, xspec: QuantSpec):
+    """C(x) = E||x||² / E[r(x)²]; r per token for per-token quant."""
+    norm2 = jnp.mean(jnp.sum(X.astype(jnp.float32) ** 2, axis=-1))
+    r = quant_range(X, xspec).astype(jnp.float32)
+    return norm2 / jnp.maximum(jnp.mean(r**2), _EPS)
+
+
+def concentration_weight(W, wspec: QuantSpec):
+    """C(W) = Σᵢ||wᵢ||² / Σᵢ r(wᵢ)² over rows (output channels)."""
+    norms = jnp.sum(W.astype(jnp.float32) ** 2, axis=-1)
+    r = quant_range(W, wspec).astype(jnp.float32)
+    return jnp.sum(norms) / jnp.maximum(jnp.sum(r**2), _EPS)
+
+
+def alignment(W, X):
+    """A(x, W) = E||Wx||² / (||W||_F² E||x||²)  (second-order alignment)."""
+    Wf = W.astype(jnp.float32)
+    Xf = X.astype(jnp.float32)
+    num = jnp.mean(jnp.sum((Xf @ Wf.T) ** 2, axis=-1))
+    den = jnp.sum(Wf**2) * jnp.mean(jnp.sum(Xf**2, axis=-1))
+    return num / jnp.maximum(den, _EPS)
+
+
+def alignment_from_cov(W, sigma_x):
+    """A(x,W) computed from the activation autocorrelation Σ_x = E[xxᵀ]:
+    A = Tr(W Σ_x Wᵀ) / (||W||_F² Tr(Σ_x))."""
+    Wf = W.astype(jnp.float32)
+    S = sigma_x.astype(jnp.float32)
+    num = jnp.trace(Wf @ S @ Wf.T)
+    den = jnp.sum(Wf**2) * jnp.trace(S)
+    return num / jnp.maximum(den, _EPS)
+
+
+def alignment_optimal(W, sigma_x):
+    """Best achievable alignment (eq. 9): A* = Σμᵢ² / (Σμᵢ)² over the
+    eigenvalues μ of G = (Σx^½ Σw Σx^½)^½ — equivalently μᵢ = √λᵢ with λ
+    the eigenvalues of Σ_y = W Σ_x Wᵀ.
+
+    Note: the paper's eq. 9 prints Σλᵢ²/(Σλᵢ)² with λ "eigenvalues of Σ_y",
+    which does not match what M̂ attains; the geometric-mean derivation
+    (min ‖WM⁻¹‖_F²·E‖Mx‖² = Tr(G)²) gives A* = Tr(ΣwΣx)/Tr(G)² =
+    Σλ/(Σ√λ)². We verified numerically that CAT-transformed layers attain
+    the √λ form exactly (tests/test_core_transforms.py), so we implement
+    that; the printed form overstates the bound.
+    """
+    Wf = W.astype(jnp.float32)
+    sy = Wf @ sigma_x.astype(jnp.float32) @ Wf.T
+    lam = jnp.linalg.eigvalsh((sy + sy.T) / 2.0)
+    mu = jnp.sqrt(jnp.maximum(lam, 0.0))
+    return jnp.sum(mu**2) / jnp.maximum(jnp.sum(mu) ** 2, _EPS)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2.4 approximation
+# ---------------------------------------------------------------------------
+
+def sqnr_approx_act(W, X, xspec: QuantSpec):
+    """Lemma 2.2: SQNR(Wx̃) ≈ 12 N(b_x)² C(x) A(x,W)."""
+    return 12.0 * n_levels(xspec.bits) ** 2 * concentration_act(X, xspec) * alignment(W, X)
+
+
+def sqnr_approx_weight(W, X, wspec: QuantSpec):
+    """Lemma 2.3: SQNR(W̃x) ≈ 12 N(b_w)² C(W) A(x,W)."""
+    return 12.0 * n_levels(wspec.bits) ** 2 * concentration_weight(W, wspec) * alignment(W, X)
+
+
+def sqnr_approx_joint(W, X, wspec: QuantSpec, xspec: QuantSpec):
+    """Theorem 2.4: 12 (N(b_x)²C(x) ∥ N(b_w)²C(W)) A(x,W)."""
+    cx = n_levels(xspec.bits) ** 2 * concentration_act(X, xspec)
+    cw = n_levels(wspec.bits) ** 2 * concentration_weight(W, wspec)
+    return 12.0 * parallel(cx, cw) * alignment(W, X)
+
+
+def sqnr_ratio(W, X, wspec: QuantSpec, xspec: QuantSpec):
+    """r(x, W) = SQNR(Wx̃)/SQNR(W̃x) (eq. 2): <1 ⇒ activations dominate."""
+    return sqnr_approx_act(W, X, xspec) / sqnr_approx_weight(W, X, wspec)
+
+
+def layer_report(W, X, bits_w=4, bits_x=4):
+    """Full per-layer diagnostic used by benchmarks & tests."""
+    wspec, xspec = weight_spec(bits_w), act_spec(bits_x)
+    sigma_x = (X.astype(jnp.float32).T @ X.astype(jnp.float32)) / X.shape[0]
+    return {
+        "sqnr_measured_db": db(sqnr_quantized_layer(W, X, wspec, xspec)),
+        "sqnr_approx_db": db(sqnr_approx_joint(W, X, wspec, xspec)),
+        "sqnr_act_db": db(sqnr_act_only(W, X, xspec)),
+        "sqnr_weight_db": db(sqnr_weight_only(W, X, wspec)),
+        "concentration_x_db": db(concentration_act(X, xspec)),
+        "concentration_w_db": db(concentration_weight(W, wspec)),
+        "alignment_db": db(alignment(W, X)),
+        "alignment_optimal_db": db(alignment_optimal(W, sigma_x)),
+    }

@@ -1,0 +1,260 @@
+"""Function-preserving linear transforms for quantization (paper Section 3-4).
+
+A transform T acts on a linear layer as  Wx = (W T⁻¹)(T x): the inverse is
+fused into the weights offline, T is applied to activations online (or
+fused into a preceding op when diagonal).
+
+Conventions: activations are row-major batches x of shape (..., d), so
+  apply(t, x)          = x @ Tᵀ          ("T x" in column-vector math)
+  fuse_weight(t, W)    = W @ T⁻¹          for W of shape (d_out, d_in)
+  fuse_cov(t, Σ)       = T Σ Tᵀ           (transformed E[xxᵀ])
+
+All transform objects are JAX pytrees (registered dataclasses) so they can
+live inside jitted serving parameter trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cat as cat_lib
+from .hadamard import hadamard_factors, hadamard_matrix
+
+
+def _register(cls, data_fields, meta_fields=()):
+    return jax.tree_util.register_dataclass(
+        cls, data_fields=list(data_fields), meta_fields=list(meta_fields)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity:
+    pass
+
+
+_register(Identity, [])
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    """T = Diag(s): per-channel scaling (SmoothQuant / CAT k=1 family)."""
+
+    s: jnp.ndarray  # (d,)
+
+
+_register(Scale, ["s"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """Arbitrary invertible T (full CAT, random rotations)."""
+
+    t: jnp.ndarray      # (d, d)
+    t_inv: jnp.ndarray  # (d, d)
+
+
+_register(Dense, ["t", "t_inv"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Hadamard:
+    """Randomized orthonormal Hadamard T = H_norm · Diag(sign).
+
+    Stored in Kronecker-factored form (H = Ha ⊗ Hb) — the full matrix is
+    never materialized for large d. sign=None disables randomization.
+    """
+
+    ha: jnp.ndarray  # (a, a) orthonormal
+    hb: jnp.ndarray  # (b, b) orthonormal
+    sign: jnp.ndarray  # (d,) ±1
+
+
+_register(Hadamard, ["ha", "hb", "sign"])
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDiag:
+    """T = Diag(M_1..M_{d/k}) — the CAT block transform."""
+
+    blocks: jnp.ndarray      # (n, k, k)
+    inv_blocks: jnp.ndarray  # (n, k, k)
+
+
+_register(BlockDiag, ["blocks", "inv_blocks"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Compose:
+    """T = parts[-1] · ... · parts[0]  (parts[0] applied first)."""
+
+    parts: Tuple
+
+
+_register(Compose, ["parts"])
+
+
+Transform = (Identity, Scale, Dense, Hadamard, BlockDiag, Compose)
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+def make_hadamard(d: int, rng: np.random.Generator | None = None) -> Hadamard:
+    ha, hb = hadamard_factors(d)
+    sign = (
+        rng.integers(0, 2, size=d).astype(np.float32) * 2 - 1
+        if rng is not None
+        else np.ones(d, dtype=np.float32)
+    )
+    return Hadamard(jnp.asarray(ha, jnp.float32), jnp.asarray(hb, jnp.float32),
+                    jnp.asarray(sign))
+
+
+def make_rotation(d: int, rng: np.random.Generator) -> Dense:
+    """Random orthogonal matrix (SpinQuant-style, untrained)."""
+    q, r = np.linalg.qr(rng.standard_normal((d, d)))
+    q = q * np.sign(np.diag(r))[None, :]
+    t = jnp.asarray(q, jnp.float32)
+    return Dense(t, t.T)
+
+
+def make_smoothquant(act_absmax: jnp.ndarray, weight_absmax: jnp.ndarray,
+                     alpha: float = 0.5) -> Scale:
+    """SmoothQuant: divide activations by s, multiply weights.
+    s_i = max|x_i|^α / max_j|w_ji|^(1-α)  ⇒  T = Diag(1/s)."""
+    s = jnp.maximum(act_absmax, 1e-5) ** alpha / jnp.maximum(
+        weight_absmax, 1e-5) ** (1 - alpha)
+    s = jnp.maximum(s, 1e-5)
+    return Scale(1.0 / s)
+
+
+def make_cat_full(sigma_w, sigma_x) -> Dense:
+    m = cat_lib.cat_optimal(sigma_w, sigma_x)
+    return Dense(m, jnp.linalg.inv(m))
+
+
+def make_cat_block(sigma_w, sigma_x, k: int = 128,
+                   hadamard: bool = True,
+                   rng: np.random.Generator | None = None):
+    """The paper's T̂ᵏ_block = H · M̂ᵏ_block (eq. 10)."""
+    d = sigma_w.shape[0]
+    if d % k != 0:  # fall back to the largest divisor ≤ k
+        k = max(j for j in range(1, k + 1) if d % j == 0)
+    if k == 1:
+        m = jnp.diagonal(cat_lib.cat_diagonal(sigma_w, sigma_x))
+        mt: object = Scale(m)
+    else:
+        blocks = cat_lib.cat_block_stacked(sigma_w, sigma_x, k)
+        mt = BlockDiag(blocks, cat_lib.inv_blocks(blocks))
+    if not hadamard:
+        return mt
+    return Compose((mt, make_hadamard(d, rng)))
+
+
+# ---------------------------------------------------------------------------
+# Application / fusion
+# ---------------------------------------------------------------------------
+
+def apply(t, x: jnp.ndarray) -> jnp.ndarray:
+    """Online activation transform: x -> x @ Tᵀ (leading dims preserved)."""
+    if isinstance(t, Identity):
+        return x
+    if isinstance(t, Scale):
+        return x * t.s.astype(x.dtype)
+    if isinstance(t, Dense):
+        return x @ t.t.T.astype(x.dtype)
+    if isinstance(t, Hadamard):
+        return _hadamard_apply(x * t.sign.astype(x.dtype), t.ha, t.hb)
+    if isinstance(t, BlockDiag):
+        return cat_lib.apply_block_diag(x, t.blocks.astype(x.dtype))
+    if isinstance(t, Compose):
+        for p in t.parts:
+            x = apply(p, x)
+        return x
+    raise TypeError(type(t))
+
+
+def _hadamard_apply(x: jnp.ndarray, ha: jnp.ndarray, hb: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ Hᵀ with H = ha ⊗ hb:  Y = ha @ X @ hbᵀ on X = x.reshape(a, b)."""
+    a, b = ha.shape[0], hb.shape[0]
+    shape = x.shape
+    xr = x.reshape(*shape[:-1], a, b)
+    y = jnp.einsum("ij,...jk,lk->...il", ha.astype(x.dtype), xr, hb.astype(x.dtype))
+    return y.reshape(shape)
+
+
+def fuse_weight(t, w: jnp.ndarray) -> jnp.ndarray:
+    """Offline: W -> W T⁻¹ so that (W T⁻¹)(T x) = W x. W: (d_out, d_in)."""
+    if isinstance(t, Identity):
+        return w
+    if isinstance(t, Scale):
+        return w / t.s[None, :].astype(w.dtype)
+    if isinstance(t, Dense):
+        return w @ t.t_inv.astype(w.dtype)
+    if isinstance(t, Hadamard):
+        # T = H·Diag(sign) ⇒ T⁻¹ = Diag(sign)·Hᵀ ⇒ W T⁻¹ = (W·Diag(sign))·Hᵀ.
+        return _hadamard_apply(w * t.sign[None, :].astype(w.dtype), t.ha, t.hb)
+    if isinstance(t, BlockDiag):
+        n, k, _ = t.inv_blocks.shape
+        d_out = w.shape[0]
+        wb = w.reshape(d_out, n, k)
+        out = jnp.einsum("onk,nkb->onb", wb, t.inv_blocks.astype(w.dtype))
+        return out.reshape(d_out, n * k)
+    if isinstance(t, Compose):
+        for p in t.parts:
+            w = fuse_weight(p, w)
+        return w
+    raise TypeError(type(t))
+
+
+def fuse_cov(t, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Σ -> T Σ Tᵀ (autocorrelation of transformed activations)."""
+    if isinstance(t, Identity):
+        return sigma
+    if isinstance(t, Scale):
+        return sigma * t.s[:, None] * t.s[None, :]
+    if isinstance(t, Dense):
+        return t.t @ sigma @ t.t.T
+    if isinstance(t, Hadamard):
+        d = sigma.shape[0]
+        s = sigma * t.sign[:, None] * t.sign[None, :]
+        s = _hadamard_apply(s, t.ha, t.hb)       # rows
+        s = _hadamard_apply(s.T, t.ha, t.hb).T   # cols
+        return s
+    if isinstance(t, BlockDiag):
+        dense = cat_lib.blocks_to_dense(t.blocks)
+        return dense @ sigma @ dense.T
+    if isinstance(t, Compose):
+        for p in t.parts:
+            sigma = fuse_cov(p, sigma)
+        return sigma
+    raise TypeError(type(t))
+
+
+def as_dense_matrix(t, d: int) -> jnp.ndarray:
+    """Materialize T as a (d, d) matrix — tests/small models only."""
+    return apply(t, jnp.eye(d, dtype=jnp.float32).reshape(d, d)).T
+
+
+def online_flops(t, d: int) -> float:
+    """Serving-time FLOPs per token for the online transform."""
+    if isinstance(t, Identity):
+        return 0.0
+    if isinstance(t, Scale):
+        return d
+    if isinstance(t, Dense):
+        return 2.0 * d * d
+    if isinstance(t, Hadamard):
+        a, b = t.ha.shape[0], t.hb.shape[0]
+        return 2.0 * d * (a + b) + d
+    if isinstance(t, BlockDiag):
+        n, k, _ = t.blocks.shape
+        return 2.0 * n * k * k
+    if isinstance(t, Compose):
+        return sum(online_flops(p, d) for p in t.parts)
+    raise TypeError(type(t))

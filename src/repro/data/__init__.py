@@ -1,0 +1,1 @@
+from repro.data.synthetic import calibration_batches, make_batch, token_stream  # noqa: F401

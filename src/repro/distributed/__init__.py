@@ -1,0 +1,2 @@
+from repro.distributed import (compression, fault_tolerance, overlap,  # noqa: F401
+                               pipeline_parallel, sharding)

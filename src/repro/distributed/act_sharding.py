@@ -1,0 +1,74 @@
+"""Activation sharding constraints (Megatron-style sequence parallelism).
+
+Between transformer layers the residual stream is the single biggest
+remat-surviving tensor (L × B·S·D bf16 — 70+ GB/device for granite-34b
+train_4k). Constraining the carry to shard its sequence dim over the
+model axis cuts that by the TP degree; GSPMD inserts the matching
+all-gather before attention and reduce-scatter after (exactly Megatron
+SP). The launcher activates a mesh context; without one every constraint
+is a no-op so tests/benches on one device are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def active_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def constrain_seq(x, seq_axis: int = 1):
+    """Shard x's sequence dim over 'model' and batch over dp axes, when
+    divisible; otherwise leave untouched."""
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    ms = mesh.shape["model"]
+    if x.ndim < 3 or x.shape[seq_axis] % ms or x.shape[seq_axis] <= 1:
+        return x
+    from repro.distributed.sharding import dp_axes
+    dp = dp_axes(mesh)
+    spec = [None] * x.ndim
+    if dp and x.shape[0] % max(1, _prod(mesh, dp)) == 0:
+        spec[0] = dp
+    spec[seq_axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_batch(x):
+    """Shard leading batch dim over dp axes when divisible."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    from repro.distributed.sharding import dp_axes
+    dp = dp_axes(mesh)
+    if not dp or x.ndim < 1 or x.shape[0] % max(1, _prod(mesh, dp)):
+        return x
+    spec = [dp] + [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def _prod(mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out

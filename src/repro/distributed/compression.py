@@ -1,0 +1,76 @@
+"""Gradient compression for the DP all-reduce: int8 quantization with
+error feedback.
+
+Scheme (per leaf, inside shard_map over the dp axis):
+  e += g                      (error feedback carry)
+  scale = absmax(e)/127; q = round(e/scale) int8
+  e -= q*scale                (residual stays local)
+  wire: all_gather(q int8, scale f32) -> mean of dequants
+
+all_gather of int8 moves ~(G-1)/G · bytes_int8 per link vs ~2·bytes_bf16
+for a ring all-reduce: ≈4× wire reduction at f32 grads, 2× at bf16. Error
+feedback makes the bias vanish over steps (tested: SGD with compressed
+grads converges to the uncompressed trajectory).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _compress_leaf(e: jnp.ndarray):
+    scale = jnp.max(jnp.abs(e)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(e / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_mean(tree, axis_name: str):
+    """Mean of `tree` across `axis_name` with int8 wire format.
+    Call inside shard_map/pmap. Returns (mean_tree)."""
+    def leaf(g):
+        q, scale = _compress_leaf(g.astype(jnp.float32))
+        qs = jax.lax.all_gather(q, axis_name)            # (G, ...) int8 wire
+        ss = jax.lax.all_gather(scale, axis_name)        # (G,) f32
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * g.ndim)
+        return jnp.mean(deq, axis=0)
+    return jax.tree.map(leaf, tree)
+
+
+def compressed_mean_with_feedback(tree, err_tree, axis_name: str):
+    """Error-feedback variant: returns (mean_tree, new_err_tree)."""
+    def leaf(g, e):
+        acc = g.astype(jnp.float32) + e
+        q, scale = _compress_leaf(acc)
+        new_e = acc - q.astype(jnp.float32) * scale
+        qs = jax.lax.all_gather(q, axis_name)
+        ss = jax.lax.all_gather(scale, axis_name)
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * g.ndim)
+        return jnp.mean(deq, axis=0), new_e
+    pairs = jax.tree.map(leaf, tree, err_tree)
+    mean = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return mean, err
+
+
+def make_grad_mean_fn(mesh, compress: bool):
+    """(grads_sharded_over_dp,) -> mean over dp axes, as a shard_map fn.
+    With compress=False this is a plain psum-mean (baseline)."""
+    from repro.distributed.sharding import dp_axes
+    dp = dp_axes(mesh)
+    assert dp, "no dp axis in mesh"
+    axis = dp[-1] if len(dp) == 1 else dp  # gather over combined axes
+
+    def mean_fn(grads):
+        if compress:
+            return compressed_mean(grads, axis)
+        return jax.tree.map(
+            lambda g: jax.lax.pmean(g.astype(jnp.float32), axis), grads)
+
+    spec_in = jax.tree.map(lambda _: P(*[None]), {})  # placeholder
+    return mean_fn

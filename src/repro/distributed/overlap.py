@@ -1,0 +1,56 @@
+"""Compute/communication overlap: ring collective matmul.
+
+Row-parallel TP layer: y = X @ W with the contraction dim k sharded over
+the model axis (device i holds X_i (m, k/G) and W_i (k/G, n)); the naive
+lowering is a full local partial product followed by a blocking
+all-reduce. The ring version interleaves: the partial product is computed
+one m-chunk at a time, and each chunk rides the ring (ppermute) while the
+next chunk's matmul runs — every ICI hop hidden behind an MXU call
+(classic reduce-scatter collective-matmul, cf. Wang et al. ASPLOS'23).
+
+Output is naturally row-scattered (chunk idx on device idx) — exactly the
+sequence-parallel layout the next layer wants; `gather=True` appends the
+all-gather for layers that need the full y.
+
+Schedule (g = ring size, device d):
+    buf = P_d[chunk (d-1)]                       # create
+    for t = 1 .. g-1:
+        buf <- ppermute(buf, +1)                 # overlaps with:
+        buf += P_d[chunk (d-1-t)]                # local MXU partial
+    => buf = Σ_i P_i[chunk d]  (y rows of block d)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_matmul(x_shard: jnp.ndarray, w_shard: jnp.ndarray,
+                axis_name: str, gather: bool = False) -> jnp.ndarray:
+    """x_shard (m, k/G), w_shard (k/G, n); m divisible by G.
+    Returns y rows chunk `idx` (m/G, n), or full (m, n) with gather."""
+    g = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    m = x_shard.shape[0]
+    assert m % g == 0, (m, g)
+    mb = m // g
+    fwd = [(i, (i + 1) % g) for i in range(g)]
+
+    def part(c):
+        rows = jax.lax.dynamic_slice_in_dim(x_shard, c * mb, mb, axis=0)
+        return jnp.dot(rows, w_shard, preferred_element_type=jnp.float32)
+
+    buf = part((idx - 1) % g)
+    for t in range(1, g):
+        buf = jax.lax.ppermute(buf, axis_name, fwd)
+        buf = buf + part((idx - 1 - t) % g)
+    if gather:
+        return jax.lax.all_gather(buf, axis_name, axis=0, tiled=True)
+    return buf
+
+
+def reference_matmul(x_shard: jnp.ndarray, w_shard: jnp.ndarray,
+                     axis_name: str) -> jnp.ndarray:
+    """Unoverlapped baseline: full local partial + blocking psum."""
+    part = jnp.dot(x_shard, w_shard, preferred_element_type=jnp.float32)
+    return jax.lax.psum(part, axis_name)

@@ -1,0 +1,195 @@
+"""Logical sharding rules: param/batch/cache pytrees -> NamedSharding.
+
+Mesh axes: ("pod", "data", "model") multi-pod or ("data", "model") single
+pod. DP runs over pod×data (gradients all-reduce across both), TP/EP over
+model, SP (long-context) shards the KV/sequence dim over data.
+
+Rules are name-based over the stable param paths the model zoo emits; a
+dim is sharded only when divisible by the mesh axis size (else replicated
+— MQA KV heads, tiny routers, conv kernels etc. fall out naturally).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# param-name -> which dim gets "model". Dims count from the END so the
+# same rule covers stacked (L, ...) / per-expert (L, E, ...) variants.
+_COL = {"wq", "wk", "wv", "wg", "wu", "we_g", "we_u", "ck",
+        "in_x", "in_z", "in_b", "in_c", "unembed", "xq", "xk", "xv"}
+_ROW = {"wo", "wd", "we_d", "cv", "out_proj", "xo"}
+_REPL = {"router", "w_lora_a", "w_lora_b", "w0", "u", "mu_tmix", "mu_cmix",
+         "conv_w", "a_log", "dt_bias", "d_skip", "in_dt", "enc_pos",
+         "dec_pos"}
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _model_size(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _spec_for(name: str, leaf, mesh) -> P:
+    ms = _model_size(mesh)
+    ndim = getattr(leaf, "ndim", len(leaf.shape))
+    shape = leaf.shape
+
+    def ok(dim_from_end):
+        return shape[ndim - dim_from_end] % ms == 0
+
+    if name == "embed":
+        return P("model", None) if shape[0] % ms == 0 else P(None, None)
+    if name in _COL and ndim >= 2 and ok(1):
+        return P(*([None] * (ndim - 1) + ["model"]))
+    if name in _ROW and ndim >= 2 and ok(2):
+        return P(*([None] * (ndim - 2) + ["model", None]))
+    return P(*([None] * ndim))
+
+
+# QLinear / transform pytree field names (paths look like layers/wq/qweight)
+_QFIELDS = {"qweight", "scale", "blocks", "inv_blocks", "ha", "hb", "sign",
+            "s", "t", "t_inv"}
+_WEIGHT_NAMES = _COL | _ROW | _REPL | {"embed"}
+
+
+def params_sharding(params, mesh):
+    """NamedSharding tree matching `params` (works on ShapeDtypeStructs).
+    Quantized leaves: qweight shards like the fp weight it replaced; the
+    per-output-channel scale follows column-parallel weights; transform
+    leaves (small blocks/Hadamard factors/signs) replicate."""
+
+    def walk(path, leaf):
+        keys = []
+        for entry in path:
+            key = getattr(entry, "key", None)
+            if key is None:
+                key = getattr(entry, "name", None)
+            if isinstance(key, str):
+                keys.append(key)
+        field = keys[-1] if keys and keys[-1] in _QFIELDS else None
+        wname = next((k for k in reversed(keys) if k in _WEIGHT_NAMES), None)
+        ms = _model_size(mesh)
+        ndim = len(leaf.shape)
+        if field in (None, "qweight"):
+            spec = _spec_for(wname or (keys[-1] if keys else ""), leaf, mesh)
+        elif field == "scale" and wname in _COL and ndim >= 1 \
+                and leaf.shape[-1] % ms == 0:
+            spec = P(*([None] * (ndim - 1) + ["model"]))
+        else:
+            spec = P(*([None] * ndim))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(
+        walk, params,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+
+def zero_opt_sharding(params_sh, opt_shapes, mesh, params_shapes=None):
+    """ZeRO-1: m/v/master pick up an extra 'data' sharding on the first
+    dim that is divisible and not already model-sharded; scalars stay
+    replicated. params keep their own (model-only) sharding."""
+    data = mesh.shape.get("data", 1)
+
+    def widen(ps, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec = list(ps.spec) + [None] * (nd - len(ps.spec))
+        for dim in range(nd):
+            if spec[dim] is None and leaf.shape[dim] % data == 0 \
+                    and leaf.shape[dim] >= data:
+                spec[dim] = "data"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    out = {}
+    for key in ("m", "v", "master"):
+        if key in opt_shapes:
+            out[key] = jax.tree.map(widen, params_sh, opt_shapes[key])
+    out["step"] = NamedSharding(mesh, P())
+    return out
+
+
+def batch_sharding(batch, mesh, shard_seq: bool = False):
+    """tokens/labels (B, S): batch over dp axes when divisible; optional SP
+    shards S over 'data' (long-context, batch=1); replicate otherwise."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if dp and leaf.shape[0] % dp_size == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+        if shard_seq and nd >= 2 and leaf.shape[1] % mesh.shape.get(
+                "data", 1) == 0 and leaf.shape[1] > 1:
+            return NamedSharding(mesh, P(None, "data", *([None] * (nd - 2))))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree.map(spec, batch,
+                        is_leaf=lambda x: hasattr(x, "shape")
+                        and not isinstance(x, dict))
+
+
+def cache_sharding(cache, mesh, cfg=None, shard_seq: bool = False):
+    """KV caches (L, B, T, KV, hd): batch on dp, heads on model when
+    divisible; long-context (B not divisible) shards T on data instead.
+    SSM states (L, B, H, dk, dv): heads on model."""
+    dp = dp_axes(mesh)
+    ms = _model_size(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def spec(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if nd == 5:  # (L, B, T, KV, hd) kv-cache or (L, B, H, dk, dv) state
+            batch_ok = dp and shape[1] % dp_size == 0
+            is_kv = shape[2] > shape[3]  # T dim much larger than heads
+            head_ax = 3 if is_kv else 2
+            heads = shape[head_ax]
+            hspec = "model" if heads % ms == 0 else None
+            if is_kv:
+                t_ok = shape[2] % ms == 0 and shape[2] > 1
+                # heads not TP-divisible (MQA/GQA-small): shard T on model
+                tspec_m = "model" if (hspec is None and t_ok) else None
+                if batch_ok:
+                    return NamedSharding(mesh, P(None, dp, tspec_m, hspec,
+                                                 None))
+                t_data = "data" if shape[2] % mesh.shape.get("data", 1) == 0 \
+                    else None
+                return NamedSharding(mesh, P(None, None,
+                                             t_data or tspec_m, hspec, None))
+            if batch_ok:
+                return NamedSharding(mesh, P(None, dp, hspec, None, None))
+            return NamedSharding(mesh, P(None, None, hspec, None, None))
+        if nd >= 2:
+            batch_ax = 1 if nd >= 3 else 0
+            if shape[batch_ax] % dp_size == 0:
+                sp = [None] * nd
+                sp[batch_ax] = dp
+                return NamedSharding(mesh, P(*sp))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree.map(spec, cache,
+                        is_leaf=lambda x: hasattr(x, "shape")
+                        and not isinstance(x, dict))
+
+
+def opt_state_sharding(params_sh, opt_state_shapes):
+    """Adam m/v mirror the param shardings; scalars replicated."""
+    def mirror(ps, leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return NamedSharding(ps.mesh, P())
+        return ps
+    m = jax.tree.map(mirror, params_sh, opt_state_shapes["m"])
+    v = jax.tree.map(mirror, params_sh, opt_state_shapes["v"])
+    mesh = jax.tree.leaves(params_sh)[0].mesh
+    return {"m": m, "v": v,
+            "step": NamedSharding(mesh, P())}

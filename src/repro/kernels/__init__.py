@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the quantized-serving hot paths, with pure-jnp
+oracles in ref.py. Validated in interpret mode on CPU; BlockSpecs target
+the v5e memory hierarchy (see DESIGN.md §3)."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: block-diagonal matmul — the online CAT transform.
+
+y[..., i·k:(i+1)·k] = x[..., i·k:(i+1)·k] @ B_iᵀ  for blocks (n, k, k).
+
+With the paper's k=128 each block is exactly one MXU tile; the grid walks
+(token-tile × block) so a block matrix is loaded once per token tile and
+the working set stays tiny (TM·k in + k² weights + TM·k out).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bdm_kernel(x_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)           # (TM, k)
+    b = b_ref[0].astype(jnp.float32)             # (k, k)
+    o_ref[...] = jnp.dot(x, b.T, preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_tokens", "interpret"))
+def block_diag_matmul(x: jnp.ndarray, blocks: jnp.ndarray,
+                      block_tokens: int = 512, interpret: bool = True):
+    """x (..., n·k), blocks (n, k, k) -> y = x @ blockdiag(B)ᵀ."""
+    n, k, _ = blocks.shape
+    d = n * k
+    assert x.shape[-1] == d, (x.shape, blocks.shape)
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, d)
+    m = xf.shape[0]
+    tm = min(block_tokens, max(m, 1))
+    pad = (-m) % tm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    grid = (xf.shape[0] // tm, n)
+    out = pl.pallas_call(
+        _bdm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, j)),
+            pl.BlockSpec((1, k, k), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, k), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, blocks)
+    if pad:
+        out = out[:m]
+    return out.reshape(*lead, d)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused per-token dynamic quantization.
+
+One VMEM pass per token tile: row min/max reduction (VPU), scale/zero-point
+computation, round+clip, int8 store. This is the activation-quant hot path
+that runs before every quantized matmul at serve time (paper setup:
+dynamic, per-token, asymmetric).
+
+Codes are stored signed (shifted by 2^(b-1)) so the downstream int8 MXU
+matmul consumes them directly; the zero-point is shifted to match
+(see ref.dynamic_quant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dq_kernel(bits: float, symmetric: bool, x_ref, q_ref, s_ref, z_ref):
+    x = x_ref[...].astype(jnp.float32)
+    if symmetric:
+        qmax = 2.0 ** (bits - 1) - 1
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-12) / qmax
+        zp = jnp.zeros_like(scale)
+        q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    else:
+        levels = 2.0**bits - 1
+        xmin = jnp.min(x, axis=-1, keepdims=True)
+        xmax = jnp.max(x, axis=-1, keepdims=True)
+        scale = jnp.maximum(xmax - xmin, 1e-12) / levels
+        zp = jnp.round(-xmin / scale)
+        q = jnp.clip(jnp.round(x / scale + zp), 0, levels) - 2.0 ** (bits - 1)
+        zp = zp - 2.0 ** (bits - 1)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+    z_ref[...] = zp
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "symmetric",
+                                             "block_tokens", "interpret"))
+def dynamic_quant(x: jnp.ndarray, bits: int = 8, symmetric: bool = False,
+                  block_tokens: int = 256, interpret: bool = True):
+    """-> (q int8 (..., d), scale f32 (..., 1), zp f32 (..., 1))."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    m = xf.shape[0]
+    tm = min(block_tokens, max(m, 1))
+    pad = (-m) % tm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)), constant_values=1.0)
+    grid = (xf.shape[0] // tm,)
+    kern = functools.partial(_dq_kernel, float(bits), symmetric)
+    q, s, z = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xf.shape, jnp.int8),
+            jax.ShapeDtypeStruct((xf.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((xf.shape[0], 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xf)
+    if pad:
+        q, s, z = q[:m], s[:m], z[:m]
+    return (q.reshape(*lead, d), s.reshape(*lead, 1), z.reshape(*lead, 1))

@@ -1,0 +1,59 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True off-TPU (the kernels execute their bodies in
+Python on CPU for validation); on a real TPU backend it flips to False and
+the same BlockSpecs drive Mosaic codegen.
+
+`cat_transform_matmul` composes the full paper serving hot path:
+   block-CAT -> Hadamard -> dynamic per-token quant -> int8 matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .block_matmul import block_diag_matmul
+from .dynamic_quant import dynamic_quant
+from .hadamard import hadamard_transform
+from .quant_matmul import quant_matmul
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hadamard(x, ha, hb, sign=None, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return hadamard_transform(x, ha, hb, sign, **kw)
+
+
+def dyn_quant(x, bits: int = 8, symmetric: bool = False, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return dynamic_quant(x, bits=bits, symmetric=symmetric, **kw)
+
+
+def qmatmul(qx, sx, zpx, qw, sw, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return quant_matmul(qx, sx, zpx, qw, sw, **kw)
+
+
+def block_matmul(x, blocks, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return block_diag_matmul(x, blocks, **kw)
+
+
+def cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
+                         act_bits: int = 4, **kw):
+    """The paper's deployed quantized linear layer, end to end:
+    y ≈ W·T⁻¹·Q(T x) with T = H·M̂_block, weights pre-fused & pre-quantized.
+
+    x (..., d) fp; blocks (n,k,k); qw (d, d_out) int8; sw (1, d_out) f32.
+    """
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    xf = block_matmul(xf, blocks, **kw)
+    xf = hadamard(xf, ha, hb, sign, **kw)
+    qx, sx, zpx = dyn_quant(xf, bits=act_bits, symmetric=False, **kw)
+    y = qmatmul(qx, sx, zpx, qw, sw, **kw)
+    return y.reshape(*lead, qw.shape[1]).astype(x.dtype)

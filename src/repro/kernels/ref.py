@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the semantics of the corresponding kernel in this
+package exactly, including quantization rounding and accumulation dtypes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hadamard_transform(x: jnp.ndarray, ha: jnp.ndarray, hb: jnp.ndarray,
+                       sign: jnp.ndarray | None = None) -> jnp.ndarray:
+    """y = (x ⊙ sign) @ Hᵀ with H = ha ⊗ hb (orthonormal factors)."""
+    a, b = ha.shape[0], hb.shape[0]
+    if sign is not None:
+        x = x * sign.astype(x.dtype)
+    shape = x.shape
+    xr = x.astype(jnp.float32).reshape(*shape[:-1], a, b)
+    y = jnp.einsum("ij,...jk,lk->...il", ha.astype(jnp.float32), xr,
+                   hb.astype(jnp.float32))
+    return y.reshape(shape).astype(x.dtype)
+
+
+def dynamic_quant(x: jnp.ndarray, bits: int = 8, symmetric: bool = False):
+    """Per-token (last-axis) dynamic quantization.
+
+    Returns (q int8, scale f32 (..., 1), zp f32 (..., 1)).
+    Asymmetric: q in [0, 2^b - 1] stored offset-by-qmax... (int8-safe via
+    shifting to signed range: q_signed = q - 2^(b-1)).
+    """
+    xf = x.astype(jnp.float32)
+    if symmetric:
+        qmax = 2.0 ** (bits - 1) - 1
+        amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-12) / qmax
+        zp = jnp.zeros_like(scale)
+        q = jnp.clip(jnp.round(xf / scale), -qmax - 1, qmax)
+    else:
+        levels = 2.0**bits - 1
+        xmin = jnp.min(xf, axis=-1, keepdims=True)
+        xmax = jnp.max(xf, axis=-1, keepdims=True)
+        scale = jnp.maximum(xmax - xmin, 1e-12) / levels
+        zp = jnp.round(-xmin / scale)
+        q = jnp.clip(jnp.round(xf / scale + zp), 0, levels)
+        q = q - 2.0 ** (bits - 1)  # shift to signed storage
+        zp = zp - 2.0 ** (bits - 1)
+    return q.astype(jnp.int8), scale, zp
+
+
+def quant_matmul(qx: jnp.ndarray, sx: jnp.ndarray, zpx: jnp.ndarray,
+                 qw: jnp.ndarray, sw: jnp.ndarray,
+                 out_dtype=jnp.float32) -> jnp.ndarray:
+    """y[m,n] = sx[m]·sw[n]·( Σ_k qx[m,k]·qw[k,n] − zpx[m]·Σ_k qw[k,n] ).
+
+    qx: (M, K) int8 (signed-shifted codes), sx/zpx: (M, 1) f32,
+    qw: (K, N) int8, sw: (1, N) f32.
+    """
+    acc = jnp.dot(qx.astype(jnp.int32), qw.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    colsum = jnp.sum(qw.astype(jnp.int32), axis=0, keepdims=True)
+    y = sx * sw * (acc.astype(jnp.float32) - zpx * colsum.astype(jnp.float32))
+    return y.astype(out_dtype)
+
+
+def block_diag_matmul(x: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ Tᵀ for block-diagonal T = Diag(B_1..B_n); blocks (n, k, k).
+    y[..., i, a] = Σ_b blocks[i, a, b] · x[..., i, b]."""
+    n, k, _ = blocks.shape
+    shape = x.shape
+    xb = x.astype(jnp.float32).reshape(*shape[:-1], n, k)
+    yb = jnp.einsum("...nk,nak->...na", xb, blocks.astype(jnp.float32))
+    return yb.reshape(shape).astype(x.dtype)
+
+
+def fused_hadamard_quant(x, ha, hb, sign, bits: int = 8):
+    """Online-transform hot path: Hadamard then per-token dynamic quant."""
+    y = hadamard_transform(x, ha, hb, sign)
+    return dynamic_quant(y, bits=bits, symmetric=False)

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell against the production meshes, record memory / cost /
+collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2_2b \
+        --shape train_4k --mesh single
+
+Results accumulate in results/dryrun.json (one entry per cell × mesh);
+benchmarks/roofline_report.py reads that file.
+
+NOTE the XLA_FLAGS line above MUST precede every other import (jax locks
+the device count on first init); this module is the ONLY place the 512
+fake host devices exist — tests and benches see one device.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.distributed.act_sharding import active_mesh  # noqa: E402
+from repro.launch.hlo_analysis import collective_bytes, cost_summary  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (ARCHS, SHAPES, build_cell,  # noqa: E402
+                                cell_runnable, layer_period)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *, n_layers=None,
+             act_shard="seq", remat=True, kv_bits=8, quantized=True,
+             save_hlo=None, exact_cost=False) -> dict:
+    import contextlib
+    from repro.models.flags import exact_cost_mode
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, n_layers=n_layers,
+                      act_shard=act_shard, remat=remat, kv_bits=kv_bits,
+                      quantized_serve=quantized)
+    cost_ctx = exact_cost_mode() if exact_cost else contextlib.nullcontext()
+    with jax.set_mesh(mesh), active_mesh(mesh), cost_ctx:
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args_sds)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    summary = cost_summary(compiled)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    return {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_layers": n_layers or cell.cfg.n_layers,
+        "layer_period": layer_period(cell.cfg),
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "collective_bytes": coll,
+        **summary,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape × mesh) cell")
+    ap.add_argument("--act-shard", default="seq", choices=["seq", "none"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=8)
+    ap.add_argument("--fp-serve", action="store_true",
+                    help="serve cells with bf16 weights (baseline compare)")
+    ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--tag", default=None,
+                    help="suffix for the result key (perf iterations)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in cells:
+        runnable, reason = cell_runnable(arch, shape)
+        for multi in meshes:
+            key = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+            if args.tag:
+                key += f"|{args.tag}"
+            if not runnable:
+                results[key] = {"arch": arch, "shape": shape,
+                                "skip": reason}
+                n_skip += 1
+                print(f"SKIP {key}: {reason}", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, sort_keys=True)
+                continue
+            try:
+                rec = run_cell(arch, shape, multi,
+                               n_layers=args.n_layers,
+                               act_shard=args.act_shard,
+                               remat=not args.no_remat,
+                               kv_bits=args.kv_bits,
+                               quantized=not args.fp_serve,
+                               save_hlo=args.save_hlo)
+                results[key] = rec
+                n_ok += 1
+                mem = rec["memory"]
+                per_dev_gb = (mem.get("argument_size_in_bytes", 0)
+                              + mem.get("temp_size_in_bytes", 0)) / 2**30
+                print(f"OK   {key}: compile={rec['compile_s']}s "
+                      f"flops={rec['flops']:.3g} "
+                      f"coll={rec['collective_bytes'].get('total', 0):.3g}B "
+                      f"mem/dev={per_dev_gb:.2f}GiB", flush=True)
+            except Exception as e:  # noqa: BLE001 — record & continue
+                n_fail += 1
+                results[key] = {"arch": arch, "shape": shape,
+                                "error": f"{type(e).__name__}: {e}"}
+                print(f"FAIL {key}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, sort_keys=True)
+
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"-> {args.out}", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips (data × model).
+Multi-pod:  (2, 16, 16) = 512 chips (pod × data × model); the pod axis is
+pure DP across the DCI.
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (dry-run hygiene).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    assert len(devs) >= n, (
+        f"need {n} devices for mesh {shape}; have {len(devs)} — run under "
+        "launch/dryrun.py (it forces 512 host devices) or a real cluster")
+    return jax.make_mesh(shape, axes, devices=devs[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

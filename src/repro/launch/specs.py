@@ -1,0 +1,262 @@
+"""Cell matrix for the multi-pod dry-run: (architecture × input shape) ->
+step function + ShapeDtypeStruct stand-ins + shardings.
+
+Shapes (per assignment):
+  train_4k     seq 4096,   global_batch 256   (train_step)
+  prefill_32k  seq 32768,  global_batch 32    (serve: prefill)
+  decode_32k   ctx 32768,  global_batch 128   (serve: one decode step)
+  long_500k    ctx 524288, global_batch 1     (decode; sub-quadratic only)
+
+Serve cells lower the QUANTIZED deployment: int8 weights + online CAT
+transforms + dynamic act quant + int8 KV cache (the paper's W4A4+KV
+setup, W4 stored in int8 range). Train cells lower bf16 params + f32
+ZeRO-sharded AdamW-master state, remat + Megatron-SP activations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import transforms as T
+from repro.core.hadamard import hadamard_factors
+from repro.core.pipeline import GroupSpec, layer_groups, shared_groups
+from repro.core.qlinear import QLinear
+from repro.distributed.sharding import (batch_sharding, cache_sharding,
+                                        params_sharding, zero_opt_sharding)
+from repro.models import build
+from repro.optim.optimizer import AdamWMaster
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+ARCHS = ["gemma2_2b", "mistral_nemo_12b", "granite_34b", "gemma3_12b",
+         "zamba2_7b", "whisper_small", "rwkv6_7b", "granite_moe_1b_a400m",
+         "moonshot_v1_16b_a3b", "paligemma_3b"]
+
+
+def cell_runnable(arch: str, shape: str):
+    """-> (runnable, reason-if-skipped). See DESIGN.md §5."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k decode requires "
+                       "sub-quadratic attention (DESIGN.md §5 skip)")
+    return True, ""
+
+
+def cell_config(arch: str, shape: str, *, act_shard: str = "seq",
+                remat: bool = True, kv_bits: int = 8,
+                n_layers: Optional[int] = None):
+    cfg = get_config(arch)
+    kind = SHAPES[shape]["kind"]
+    over = {}
+    if kind == "train":
+        over.update(remat=remat, act_shard=act_shard)
+    else:
+        if cfg.family in ("dense", "moe", "vlm"):
+            over.update(kv_quant_bits=kv_bits)
+    if n_layers is not None:
+        over["n_layers"] = n_layers
+        if cfg.family == "encdec":
+            over["n_enc_layers"] = n_layers
+    return cfg.scaled(**over)
+
+
+def layer_period(cfg) -> int:
+    """Smallest structure-preserving layer count (for L/2L roofline
+    extrapolation)."""
+    if cfg.family == "hybrid":
+        return cfg.attn_every
+    if cfg.local_ratio:
+        return cfg.local_ratio + 1
+    return 1
+
+
+# --------------------------------------------------- abstract params (SDS)
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def abstract_params(cfg, quantized: bool):
+    model = build(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if not quantized:
+        # train: bf16 working params
+        return jax.tree.map(
+            lambda l: _sds(l.shape, jnp.bfloat16
+                           if l.dtype in (jnp.float32, jnp.bfloat16)
+                           else l.dtype), shapes)
+    return _quantized_abstract(cfg, shapes)
+
+
+def _abstract_transform(d: int, k: int, stack: tuple = ()):
+    k = max(j for j in range(1, min(k, d) + 1) if d % j == 0)
+    n = d // k
+    fa, fb = hadamard_factors(d)
+    a, b = fa.shape[0], fb.shape[0]
+    if k == 1:
+        mt = T.Scale(_sds(stack + (d,), jnp.float32))
+    else:
+        mt = T.BlockDiag(_sds(stack + (n, k, k), jnp.float32),
+                         _sds(stack + (n, k, k), jnp.float32))
+    had = T.Hadamard(_sds(stack + (a, a), jnp.float32),
+                     _sds(stack + (b, b), jnp.float32),
+                     _sds(stack + (d,), jnp.float32))
+    return T.Compose((mt, had))
+
+
+def _quantized_abstract(cfg, shapes):
+    """Mirror pipeline.quantize_model structurally with SDS leaves."""
+    out = jax.tree.map(
+        lambda l: _sds(l.shape, jnp.bfloat16
+                       if l.dtype in (jnp.float32, jnp.bfloat16)
+                       else l.dtype), shapes)
+
+    def q_leaf(leaf, stack):
+        d_in, d_out = leaf.shape[-2], leaf.shape[-1]
+        lead = leaf.shape[:-2]
+        return QLinear(
+            _sds(leaf.shape, jnp.int8),
+            _sds(lead + (1, d_out), jnp.float32),
+            _abstract_transform(d_in, cfg.cat_block, stack),
+            act_bits=4)
+
+    def convert(scope_name, groups, stacked: bool):
+        scope = out.get(scope_name)
+        if scope is None:
+            return
+        for g in groups:
+            for name in g.weights:
+                if name not in scope:
+                    continue
+                leaf = scope[name]
+                stack = (leaf.shape[0],) if stacked else ()
+                scope[name] = q_leaf(leaf, stack)
+
+    convert("layers", [g for g in layer_groups(cfg) if g.scope == "layers"],
+            True)
+    if cfg.family == "hybrid":
+        convert("mamba", [g for g in layer_groups(cfg)
+                          if g.scope == "mamba"], True)
+        convert("shared_attn", shared_groups(cfg), False)
+    if cfg.family == "encdec":
+        convert("enc_layers",
+                [GroupSpec("attn_in", ("wq", "wk", "wv"), "enc_layers"),
+                 GroupSpec("mlp_in", ("wg", "wu"), "enc_layers"),
+                 GroupSpec("down_in", ("wd",), "enc_layers")], True)
+    return out
+
+
+# ----------------------------------------------------------- cell builder
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: object
+    step_fn: object          # callable(*args)
+    args_sds: tuple
+    in_shardings: tuple
+    donate: tuple
+
+
+def build_cell(arch: str, shape: str, mesh, *, n_layers=None,
+               act_shard="seq", remat=True, kv_bits=8,
+               quantized_serve=True) -> Cell:
+    info = SHAPES[shape]
+    cfg = cell_config(arch, shape, act_shard=act_shard, remat=remat,
+                      kv_bits=kv_bits, n_layers=n_layers)
+    model = build(cfg)
+    kind = info["kind"]
+    B, S = info["batch"], info["seq"]
+
+    def batch_sds(seq, batch):
+        d: dict = {"tokens": _sds((batch, seq), jnp.int32),
+                   "labels": _sds((batch, seq), jnp.int32)}
+        if cfg.family == "encdec":
+            d["enc_embed"] = _sds((batch, cfg.enc_seq, cfg.d_model),
+                                  jnp.bfloat16)
+        if cfg.family == "vlm":
+            d["patch_embed"] = _sds((batch, cfg.n_patches, cfg.d_model),
+                                    jnp.bfloat16)
+        return d
+
+    if kind == "train":
+        params = abstract_params(cfg, quantized=False)
+        opt = AdamWMaster(lr=1e-4)
+        opt_sds = jax.eval_shape(opt.init, params)
+        batch = batch_sds(S, B)
+        p_sh = params_sharding(params, mesh)
+        o_sh = zero_opt_sharding(p_sh, opt_sds, mesh)
+        b_sh = batch_sharding(batch, mesh)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                l, metrics = model.loss(p, batch)
+                return l, metrics
+            (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, dict(metrics, loss=l)
+
+        return Cell(arch, shape, cfg, train_step,
+                    (params, opt_sds, batch), (p_sh, o_sh, b_sh), (0, 1))
+
+    params = abstract_params(cfg, quantized=quantized_serve)
+    p_sh = params_sharding(params, mesh)
+
+    cache_len = S + (cfg.n_patches or 0)  # vlm: patches occupy cache slots
+    if kind == "prefill":
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, cache_len))
+        c_sh = cache_sharding(cache_sds, mesh)
+        tokens = _sds((B, S), jnp.int32)
+        t_sh = batch_sharding(tokens, mesh)
+        kw_sds, kw_sh = {}, {}
+        if cfg.family == "encdec":
+            kw_sds["enc_embed"] = _sds((B, cfg.enc_seq, cfg.d_model),
+                                       jnp.bfloat16)
+            kw_sh["enc_embed"] = batch_sharding(kw_sds["enc_embed"], mesh)
+        if cfg.family == "vlm":
+            kw_sds["extra_embed"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                         jnp.bfloat16)
+            kw_sh["extra_embed"] = batch_sharding(kw_sds["extra_embed"], mesh)
+
+        if kw_sds:
+            names = tuple(sorted(kw_sds))
+
+            def prefill_step(params, tokens, cache, extra):
+                return model.prefill(params, tokens, cache,
+                                     **dict(zip(names, extra)))
+
+            extra_sds = tuple(kw_sds[n] for n in names)
+            extra_sh = tuple(kw_sh[n] for n in names)
+            return Cell(arch, shape, cfg, prefill_step,
+                        (params, tokens, cache_sds, extra_sds),
+                        (p_sh, t_sh, c_sh, extra_sh), (2,))
+
+        def prefill_step(params, tokens, cache):
+            return model.prefill(params, tokens, cache)
+
+        return Cell(arch, shape, cfg, prefill_step,
+                    (params, tokens, cache_sds), (p_sh, t_sh, c_sh), (2,))
+
+    # decode: one token with a full cache of length S
+    cache_sds = jax.eval_shape(lambda: model.init_cache(B, cache_len))
+    c_sh = cache_sharding(cache_sds, mesh)
+    token = _sds((B, 1), jnp.int32)
+    t_sh = batch_sharding(token, mesh)
+
+    def decode_step(params, token, cache):
+        return model.decode(params, token, cache)
+
+    return Cell(arch, shape, cfg, decode_step,
+                (params, token, cache_sds), (p_sh, t_sh, c_sh), (2,))

@@ -1,0 +1,282 @@
+"""Dense decoder-only transformer family.
+
+Covers: gemma2-2b (local/global alternation, softcaps, sandwich norms),
+gemma3-12b (5:1 local:global, qk-norm), mistral-nemo-12b, granite-34b
+(MQA), paligemma-3b backbone (prefix patch embeddings), catlm-60m, and the
+MoE variants (granite-moe, moonshot) via repro.models.moe.
+
+Layers are stacked on a leading axis and driven by lax.scan (small HLO,
+fast multi-pod compiles). ``unroll=True`` runs a Python loop instead so
+calibration taps can observe per-layer activations.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.models import moe as moe_lib
+from repro.models.layers import (chunked_attention, cache_update, glu_mlp,
+                                 rms_norm, rope, softcap)
+
+
+def _compute_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _init_linear(rng, d_in, d_out, dtype=jnp.float32):
+    return (jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32)
+            / jnp.sqrt(d_in)).astype(dtype)
+
+
+def is_global_flags(cfg) -> jnp.ndarray:
+    """(L,) bool: which layers use global (full) attention."""
+    if not cfg.window or cfg.local_ratio == 0:
+        return jnp.ones((cfg.n_layers,), bool)
+    idx = jnp.arange(cfg.n_layers)
+    return (idx % (cfg.local_ratio + 1)) == cfg.local_ratio
+
+
+def init(cfg, rng) -> dict:
+    keys = iter(jax.random.split(rng, 64))
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    Hq, Hkv = cfg.q_dim, cfg.kv_dim
+
+    def lin(d_in, d_out, extra=()):
+        k = next(keys)
+        ks = jax.random.split(k, L)
+        return jnp.stack([_init_linear(ks[i], d_in, d_out) for i in range(L)]
+                         ) if not extra else None
+
+    # vectorized per-layer init (vmap over layer axis keeps it fast)
+    def lins(d_in, d_out):
+        k = jax.random.split(next(keys), L)
+        return jax.vmap(lambda kk: _init_linear(kk, d_in, d_out))(k)
+
+    layers = {
+        "ln1": jnp.zeros((L, D)),
+        "ln2": jnp.zeros((L, D)),
+        "wq": lins(D, Hq),
+        "wk": lins(D, Hkv),
+        "wv": lins(D, Hkv),
+        "wo": lins(Hq, D),
+    }
+    if cfg.post_norms:
+        layers["ln1_post"] = jnp.zeros((L, D))
+        layers["ln2_post"] = jnp.zeros((L, D))
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.zeros((L, cfg.head_dim))
+        layers["k_norm"] = jnp.zeros((L, cfg.head_dim))
+    if cfg.n_experts:
+        layers.update(moe_lib.init_layers(cfg, next(keys)))
+    else:
+        if cfg.gated_mlp:
+            layers["wg"] = lins(D, F)
+        layers["wu"] = lins(D, F)
+        layers["wd"] = lins(F, D)
+
+    params = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, D)) * 0.02,
+        "final_norm": jnp.zeros((D,)),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init_linear(next(keys), D, cfg.vocab)
+    return params
+
+
+# ----------------------------------------------------------------- forward
+
+def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
+                taps=None, layer_idx=None):
+    """cache_sl: per-layer cache slices dict ({"k","v"[,"k_scale","v_scale"]})
+    or None. Returns (x, new_cache_sl, aux)."""
+    b, s, d = x.shape
+    cd = x.dtype
+
+    h = rms_norm(x, lp["ln1"])
+    _tap(taps, layer_idx, "attn_in", h)
+    q = qlinear.dense(lp["wq"], h).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = qlinear.dense(lp["wk"], h).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = qlinear.dense(lp["wv"], h).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    window = None
+    if cfg.window:
+        window = jnp.where(is_global, jnp.int32(2**30), jnp.int32(cfg.window))
+
+    quant_cache = bool(cfg.kv_quant_bits) and cache_sl is not None \
+        and "k_scale" in cache_sl
+    if cfg.kv_quant_bits and not quant_cache:
+        # no cache (training fwd): simulate KV quantization numerics
+        from repro.core.quantizers import QuantSpec, fake_quant
+        kv_spec = QuantSpec(bits=cfg.kv_quant_bits, symmetric=False,
+                            per="token", dynamic=True)
+        k = fake_quant(k, kv_spec)
+        v = fake_quant(v, kv_spec)
+
+    new_cache_sl = None
+    if cache_sl is not None and quant_cache:
+        from repro.models.layers import cache_update_quantized
+        ck, cks, cv, cvs = cache_update_quantized(
+            cache_sl["k"], cache_sl["k_scale"], cache_sl["v"],
+            cache_sl["v_scale"], k, v, pos, cfg.kv_quant_bits)
+        new_cache_sl = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
+        k_att, v_att = (ck, cks), (cv, cvs)
+    elif cache_sl is not None:
+        ck, cv = cache_update(cache_sl["k"], cache_sl["v"], k, v, pos)
+        new_cache_sl = {"k": ck, "v": cv}
+        k_att, v_att = ck.astype(cd), cv.astype(cd)
+    else:
+        k_att, v_att = k, v
+
+    o = chunked_attention(q, k_att, v_att,
+                          q_positions=positions, causal=True, window=window,
+                          attn_softcap=cfg.attn_softcap)
+    o = o.reshape(b, s, cfg.q_dim)
+    _tap(taps, layer_idx, "o_in", o)
+    attn_out = qlinear.dense(lp["wo"], o)
+    if cfg.post_norms:
+        attn_out = rms_norm(attn_out, lp["ln1_post"])
+    x = x + attn_out
+
+    h2 = rms_norm(x, lp["ln2"])
+    _tap(taps, layer_idx, "mlp_in", h2)
+    if cfg.n_experts:
+        mlp_out, aux = moe_lib.moe_mlp(cfg, lp, h2, taps=taps,
+                                       layer_idx=layer_idx)
+    else:
+        from repro.models.layers import activation
+        act = activation(cfg.act)
+        if cfg.gated_mlp:
+            hmid = act(qlinear.dense(lp["wg"], h2)) * qlinear.dense(lp["wu"], h2)
+        else:
+            hmid = act(qlinear.dense(lp["wu"], h2))
+        _tap(taps, layer_idx, "down_in", hmid)
+        mlp_out = qlinear.dense(lp["wd"], hmid)
+        aux = jnp.zeros((), jnp.float32)
+    if cfg.post_norms:
+        mlp_out = rms_norm(mlp_out, lp["ln2_post"])
+    x = x + mlp_out
+    if cfg.act_shard == "seq":
+        from repro.distributed.act_sharding import constrain_seq
+        x = constrain_seq(x)
+    return x, new_cache_sl, aux
+
+
+def _tap(taps, layer_idx, name, x):
+    if taps is not None and layer_idx is not None:
+        taps.record(f"layers.{layer_idx}.{name}", x)
+
+
+def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
+            taps=None, unroll: bool = False):
+    """-> (hidden (B, S, D), aux_loss, new_cache). ``tokens`` (B, S) int32;
+    ``extra_embed`` (B, P, D) is prepended (vlm prefix); with ``cache`` the
+    attention runs against the cache and writes k/v at cache['pos']."""
+    cd = _compute_dtype(cfg)
+    x = params["embed"][tokens].astype(cd) * jnp.sqrt(float(cfg.d_model)
+                                                      ).astype(cd)
+    if extra_embed is not None:
+        x = jnp.concatenate([extra_embed.astype(cd), x], axis=1)
+    b, s, _ = x.shape
+    pos = cache["pos"] if cache is not None else jnp.int32(0)
+    positions = pos + jnp.arange(s, dtype=jnp.int32)
+    flags = is_global_flags(cfg)
+
+    cache_layers = None
+    if cache is not None:
+        cache_layers = {k: v for k, v in cache.items() if k != "pos"}
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if unroll:
+        new_sl = []
+        aux = aux0
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            csl = (jax.tree.map(lambda a: a[i], cache_layers)
+                   if cache_layers is not None else None)
+            x, csl, a = _layer_body(cfg, x, lp, csl, flags[i], pos,
+                                    positions, taps=taps, layer_idx=i)
+            aux = aux + a
+            if csl is not None:
+                new_sl.append(csl)
+        new_cache = None
+        if cache is not None:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_sl)
+            new_cache = dict(stacked, pos=pos + s)
+    else:
+        def body(carry, xs):
+            x, aux = carry
+            if cache_layers is not None:
+                lp, csl, fl = xs
+            else:
+                (lp, fl), csl = xs, None
+            x, csl, a = _layer_body(cfg, x, lp, csl, fl, pos, positions)
+            return (x, aux + a), csl
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cache_layers is not None:
+            xs = (params["layers"], cache_layers, flags)
+        else:
+            xs = (params["layers"], flags)
+        from repro.models.flags import scan as _scan
+        (x, aux), ys = _scan(body, (x, aux0), xs)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(ys, pos=pos + s)
+
+    x = rms_norm(x, params["final_norm"])
+    return x, aux, new_cache
+
+
+def logits_fn(cfg, params, hidden):
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = hidden @ unembed.astype(hidden.dtype)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def loss(cfg, params, batch, *, loss_chunk: int = 512):
+    """Chunked CE over the sequence (never materializes (B, S, V) logits)."""
+    from repro.models.losses import chunked_ce
+    extra = batch.get("patch_embed") if cfg.n_patches else None
+    hidden, aux, _ = forward(cfg, params, batch["tokens"], extra_embed=extra)
+    if extra is not None:
+        hidden = hidden[:, extra.shape[1]:]
+    return chunked_ce(lambda h: logits_fn(cfg, params, h), hidden,
+                      batch["labels"], aux, loss_chunk=loss_chunk)
+
+
+# ------------------------------------------------------------------ caches
+
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+    cd = _compute_dtype(cfg)
+    if cfg.kv_quant_bits:
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_scale": jnp.zeros(sshape, jnp.float32),
+                "pos": jnp.int32(0)}
+    return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd),
+            "pos": jnp.int32(0)}
+
+
+def prefill(cfg, params, tokens, cache, extra_embed=None):
+    hidden, _, cache = forward(cfg, params, tokens, extra_embed=extra_embed,
+                               cache=cache)
+    return logits_fn(cfg, params, hidden[:, -1:]), cache
+
+
+def decode(cfg, params, token, cache):
+    """token (B, 1) -> (logits (B, 1, V), cache)."""
+    hidden, _, cache = forward(cfg, params, token, cache=cache)
+    return logits_fn(cfg, params, hidden), cache

@@ -1,0 +1,43 @@
+"""Tracing-time flags for cost-exact lowering.
+
+XLA's cost_analysis counts a lax.scan body ONCE (trip count is not
+multiplied in). The roofline harness therefore lowers small (L=p, L=2p)
+model variants in `exact_cost_mode()`, which makes every scan in the model
+zoo fully unroll — per-layer/per-chunk ops then appear in the HLO the
+correct number of times and the L-extrapolation is exact. Normal runs
+keep rolled scans (small HLO, fast compiles).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_UNROLL = contextvars.ContextVar("repro_unroll_scans", default=False)
+
+
+@contextlib.contextmanager
+def exact_cost_mode():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def exact_cost() -> bool:
+    return _UNROLL.get()
+
+
+def scan(body, carry, xs, **kw):
+    """jax.lax.scan that fully unrolls under exact_cost_mode().
+
+    Used for the LAYER scans (small trip counts at the L=p/2p cost cells).
+    Inner chunk scans instead switch to a single chunk in exact mode
+    (attention/loss: nc=1 has identical FLOPs to the chunked algorithm and
+    keeps the graph small; GLA keeps its real chunk size — its recurrence
+    FLOPs are <2% of the projections, undercount documented)."""
+    if _UNROLL.get():
+        kw = dict(kw, unroll=True)
+    return jax.lax.scan(body, carry, xs, **kw)

@@ -1,0 +1,177 @@
+"""Chunked gated linear attention — the shared recurrence core for RWKV-6
+(per-channel data-dependent decay) and Mamba-2 SSD (per-head scalar decay).
+
+Recurrence (per head, state S ∈ R^{dk×dv}):
+    S_t = Diag(w_t) S_{t-1} + k_t v_tᵀ
+    o_t = S_{t-1}ᵀ r_t                (+ caller-specific bonus terms)
+
+TPU-native chunked form (DESIGN.md §3): within a chunk of C steps all
+cross-terms become two MXU matmuls using cumulative log-decay c_t:
+    A[t,i] = (r_t ⊙ e^{c_{t-1}-c_C}) · (k_i ⊙ e^{c_C-c_i}),  i < t
+    inter  = (r_t ⊙ e^{c_{t-1}}) S
+    S'     = Diag(e^{c_C}) S + Σ_i (k_i ⊙ e^{c_C-c_i}) v_iᵀ
+
+Stability: log-decay is clamped to [LOG_W_MIN, 0] per step so the
+intra-chunk exponential span is bounded by |LOG_W_MIN|·C (< f32 range).
+A production TPU kernel would instead renormalize per 16-step sub-chunk
+(FLA-style); the clamp keeps the pure-JAX reference exact w.r.t. itself
+and is recorded as a hardware-adaptation note in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOG_W_MIN = -1.0
+CHUNK = 32
+
+
+def clamp_log_decay(log_w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(log_w, LOG_W_MIN, -1e-6)
+
+
+def gla_chunked(r, k, v, log_w, state=None, chunk: int = CHUNK):
+    """r, k: (B, S, H, dk); v: (B, S, H, dv); log_w: (B, S, H, dk) in
+    [LOG_W_MIN, 0). state: (B, H, dk, dv) initial (zeros if None).
+    Returns (o (B, S, H, dv), final_state).
+    """
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, log_w = (t.astype(f32) for t in (r, k, v, log_w))
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), f32)
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=-1e-6)
+    nc = r.shape[1] // c
+
+    def resh(t):
+        return t.reshape(b, nc, c, h, -1).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(log_w)
+    mask = jnp.tril(jnp.ones((c, c), f32), -1)  # strictly causal (i < t)
+
+    def step(S, xs):
+        rj, kj, vj, wj = xs                      # (B, C, H, dk|dv)
+        cum = jnp.cumsum(wj, axis=1)             # c_t
+        c_prev = cum - wj                        # c_{t-1}
+        c_tot = cum[:, -1:]                      # c_C
+        q_in = rj * jnp.exp(c_prev - c_tot)      # bounded by e^{|min|·C}
+        k_in = kj * jnp.exp(c_tot - cum)         # ≤ 1
+        scores = jnp.einsum("bthd,bshd->bhts", q_in, k_in) * mask
+        o_intra = jnp.einsum("bhts,bshv->bthv", scores, vj)
+        o_inter = jnp.einsum("bthd,bhdv->bthv", rj * jnp.exp(c_prev), S)
+        S_new = (jnp.exp(c_tot)[:, 0, :, :, None] * S
+                 + jnp.einsum("bshd,bshv->bhdv", k_in, vj))
+        return S_new, o_intra + o_inter
+
+    # plain scan: GLA recurrence FLOPs are <2% of the surrounding
+    # projections; exact-cost mode leaves this rolled (see flags.scan)
+    state, oc = jax.lax.scan(step, state, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(b, nc * c, h, dv)
+    if pad:
+        o = o[:, :s]
+    return o, state
+
+
+def ssd_chunked(r, k, v, log_w, state=None, chunk: int = CHUNK):
+    """Mamba-2 SSD chunked form — decay is SCALAR per head, and r/k (the
+    C/B projections) are SHARED across heads, so the intra-chunk inner
+    product is computed ONCE (head-independent) and per-head decay enters
+    as a chunk-local (C×C) elementwise factor. Versus broadcasting r/k to
+    (B,S,H,dk) and reusing gla_chunked, this removes the H× blowup in
+    both FLOPs (scores) and transient memory (§Perf B1).
+
+    r, k: (B, S, dk); v: (B, S, H, dv); log_w: (B, S, H) in [LOG_W_MIN, 0).
+    state: (B, H, dk, dv). Returns (o (B, S, H, dv), final state).
+
+    §Perf B4: r/k/v stay in their compute dtype (bf16 — halves the
+    dominant (B,S,H,dv) transients); decay math and the carried state are
+    f32 (the recurrence is the numerically sensitive part).
+    """
+    b, s, dk = r.shape
+    _, _, h, dv = v.shape
+    f32 = jnp.float32
+    log_w = log_w.astype(f32)
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), f32)
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e-6)
+    nc = r.shape[1] // c
+    rc = r.reshape(b, nc, c, dk).transpose(1, 0, 2, 3)
+    kc = k.reshape(b, nc, c, dk).transpose(1, 0, 2, 3)
+    vc = v.reshape(b, nc, c, h, dv).transpose(1, 0, 2, 3, 4)
+    wc = log_w.reshape(b, nc, c, h).transpose(1, 0, 2, 3)
+    mask = jnp.tril(jnp.ones((c, c), f32), -1)
+
+    def step(S, xs):
+        rj, kj, vj, wj = xs
+        cum = jnp.cumsum(wj, axis=1)              # (B, C, H)
+        c_prev = cum - wj
+        c_tot = cum[:, -1]                        # (B, H)
+        inner = jnp.einsum("btd,bsd->bts", rj, kj,
+                           preferred_element_type=f32)      # head-free
+        decay = jnp.exp(c_prev[:, :, None, :] - cum[:, None, :, :])
+        decay = decay * mask[None, :, :, None]              # (B,C,C,H)
+        o_intra = jnp.einsum("bts,btsh,bshv->bthv", inner, decay,
+                             vj.astype(f32))
+        o_inter = jnp.einsum("btd,bth,bhdv->bthv", rj.astype(f32),
+                             jnp.exp(c_prev), S)
+        k_dec = jnp.exp(c_tot[:, None, :] - cum)            # (B,C,H) ≤ 1
+        S = (jnp.exp(c_tot)[:, :, None, None] * S
+             + jnp.einsum("bsd,bsh,bshv->bhdv", kj.astype(f32), k_dec,
+                          vj.astype(f32)))
+        return S, o_intra + o_inter
+
+    state, oc = jax.lax.scan(step, state, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(b, nc * c, h, dv)
+    if pad:
+        o = o[:, :s]
+    return o, state
+
+
+def ssd_decode_step(r, k, v, log_w, state):
+    """One-token SSD update. r/k: (B, dk); v: (B, H, dv); log_w: (B, H);
+    state: (B, H, dk, dv)."""
+    f32 = jnp.float32
+    r, k, v, log_w = (t.astype(f32) for t in (r, k, v, log_w))
+    o = jnp.einsum("bd,bhdv->bhv", r, state)
+    state = jnp.exp(log_w)[..., None, None] * state \
+        + k[:, None, :, None] * v[:, :, None, :]
+    return o, state
+
+
+def gla_decode_step(r, k, v, log_w, state):
+    """Single-token recurrent update. r/k: (B, H, dk); v: (B, H, dv);
+    log_w: (B, H, dk); state: (B, H, dk, dv). Returns (o (B,H,dv), state)."""
+    f32 = jnp.float32
+    r, k, v, log_w = (t.astype(f32) for t in (r, k, v, log_w))
+    o = jnp.einsum("bhd,bhdv->bhv", r, state)
+    state = jnp.exp(log_w)[..., None] * state + k[..., None] * v[..., None, :]
+    return o, state
+
+
+def gla_reference(r, k, v, log_w, state=None):
+    """O(S) sequential oracle for tests."""
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, state = gla_decode_step(r[:, t], k[:, t], v[:, t], log_w[:, t],
+                                   state)
+        outs.append(o)
+    return jnp.stack(outs, axis=1), state

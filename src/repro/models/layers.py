@@ -1,0 +1,194 @@
+"""Shared model layers: norms, RoPE, chunked (flash-style) attention, MLP.
+
+Attention uses an online-softmax scan over KV chunks so the score matrix
+is never materialized (O(S·chunk) working set instead of O(S²)) — required
+for the 32k prefill cells to fit HBM, and the natural TPU formulation
+(each chunk is an MXU matmul; the running max/sum rescale is VPU work).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+
+_NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- norms
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def group_rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    """Per-head RMS norm: x (..., H, hd), scale (H*hd,) reshaped."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    out = out * (1.0 + scale.astype(jnp.float32).reshape(x.shape[-2], x.shape[-1]))
+    return out.astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, hd), positions: (B, S) or (S,) absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[:, :, None] * freq[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------- chunked flash-style attention
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      q_positions: jnp.ndarray,
+                      causal: bool = True,
+                      window: Optional[int] = None,
+                      attn_softcap: float = 0.0,
+                      kv_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with KV | H (GQA) — or
+    (codes int8, scale) tuples for int8 KV caches (dequantized per chunk
+    inside the scan, so the bf16 cache is never materialized).
+    q_positions: (B, Sq) absolute positions (decode passes the cache pos);
+    KV positions are arange(Skv). Causal mask: q_pos >= kv_pos — this also
+    masks unwritten cache slots (their positions exceed every query).
+    """
+    k_q = isinstance(k, tuple)
+    v_q = isinstance(v, tuple)
+    k_arr = k[0] if k_q else k
+    v_arr = v[0] if v_q else v
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k_arr.shape
+    g = h // kvh
+    scale = hd ** -0.5
+    # §Perf A3: keep q/k/v in compute dtype on the wire (SP/TP gathers at
+    # bf16 bytes); score/PV einsums accumulate in f32 on the MXU via
+    # preferred_element_type — flash-attention-standard numerics.
+    cd = q.dtype
+    qf = (q * jnp.asarray(scale, cd)).reshape(b, sq, kvh, g, hd)
+
+    from repro.models.flags import exact_cost
+    c = skv if exact_cost() else min(kv_chunk, skv)
+    pad = (-skv) % c
+
+    def prep(t):
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        nc = t.shape[1] // c
+        return t.reshape(b, nc, c, t.shape[2], t.shape[3]
+                         ).transpose(1, 0, 2, 3, 4)
+
+    kc = jax.tree.map(prep, k)
+    vc = jax.tree.map(prep, v)
+    nc = (skv + pad) // c
+    kv_pos = jnp.arange(nc * c, dtype=jnp.int32).reshape(nc, c)
+    qp = q_positions if q_positions.ndim == 2 else q_positions[None, :]
+
+    def _deq(t, quantized):
+        if quantized:
+            codes, sc = t
+            return codes.astype(cd) * sc.astype(cd)
+        return t.astype(cd)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, pj = xs
+        kj = _deq(kj, k_q)
+        vj = _deq(vj, v_q)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kj,
+                       preferred_element_type=jnp.float32)
+        s = softcap(s, attn_softcap)
+        mask = jnp.ones((b, sq, c), dtype=bool)
+        if causal:
+            mask &= qp[:, :, None] >= pj[None, None, :]
+        if window is not None:
+            mask &= (qp[:, :, None] - pj[None, None, :]) < window
+        if pad:
+            mask &= (pj < skv)[None, None, :]
+        s = jnp.where(mask[:, None, None, :, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(cd), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    from repro.models.flags import scan as _scan
+    (m, l, acc), _ = _scan(step, (m0, l0, a0), (kc, vc, kv_pos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------- MLP
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def glu_mlp(p, x, act: str):
+    """Gated MLP: down( act(gate(x)) * up(x) ). p: dict wg/wu/wd."""
+    h = activation(act)(qlinear.dense(p["wg"], x)) * qlinear.dense(p["wu"], x)
+    return qlinear.dense(p["wd"], h)
+
+
+# ---------------------------------------------------------------- KV cache
+
+def cache_update(cache_k, cache_v, k, v, pos):
+    """Write k, v (B, S, KV, hd) into caches at [pos, pos+S)."""
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, pos, 0, 0))
+    return ck, cv
+
+
+def quantize_kv(x: jnp.ndarray, bits: int):
+    """Symmetric per-(token, head) int8-storage quantization of K/V.
+    x (B, S, KV, hd) -> (codes int8, scale f32 (B, S, KV, 1))."""
+    qmax = 2.0 ** (bits - 1) - 1
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    codes = jnp.clip(jnp.round(xf / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return codes, scale
+
+
+def cache_update_quantized(ck, cks, cv, cvs, k, v, pos, bits: int):
+    """int8 KV-cache write: codes + per-token scales at [pos, pos+S)."""
+    kq, ks = quantize_kv(k, bits)
+    vq, vs = quantize_kv(v, bits)
+    ck = jax.lax.dynamic_update_slice(ck, kq, (0, pos, 0, 0))
+    cks = jax.lax.dynamic_update_slice(cks, ks, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, vq, (0, pos, 0, 0))
+    cvs = jax.lax.dynamic_update_slice(cvs, vs, (0, pos, 0, 0))
+    return ck, cks, cv, cvs

@@ -1,0 +1,45 @@
+"""Shared loss utilities: sequence-chunked cross-entropy.
+
+The (B, S, V) logits tensor is never materialized — a scan over sequence
+chunks computes per-chunk logits + LSE and accumulates scalars. Under TP
+the vocab axis is model-sharded, so per-chunk peak bytes are
+B·chunk·V/TP·4, which keeps 256k-vocab × 1M-token train cells in HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_ce(logits_fn, hidden: jnp.ndarray, labels: jnp.ndarray,
+               aux: jnp.ndarray | float = 0.0, aux_coef: float = 0.01,
+               loss_chunk: int = 512):
+    """logits_fn: hidden_chunk (B, c, D) -> logits (B, c, V).
+    labels < 0 are masked. Returns (total_loss, metrics)."""
+    from repro.models.flags import exact_cost
+    b, s, d = hidden.shape
+    c = s if exact_cost() else min(loss_chunk, s)
+    pad = (-s) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = hidden.shape[1] // c
+    hc = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        h, lab = xs
+        logits = logits_fn(h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lab, 0)[..., None],
+                                   axis=-1)[..., 0]
+        mask = (lab >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((lse - gold) * mask),
+                cnt + jnp.sum(mask)), None
+
+    from repro.models.flags import scan as _scan
+    (tot, cnt), _ = _scan(step, (jnp.float32(0), jnp.float32(0)), (hc, lc))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    aux = jnp.asarray(aux, jnp.float32)
+    return ce + aux_coef * aux, {"ce": ce, "aux": aux}

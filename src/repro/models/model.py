@@ -1,0 +1,82 @@
+"""Unified model API: ``build(cfg) -> Model`` bundle of pure functions.
+
+Families: dense (gemma2/3, mistral-nemo, granite, paligemma backbone,
+catlm), moe (dense skeleton + expert MLP), ssm (rwkv6), hybrid (zamba2),
+encdec (whisper), vlm (dense + prefix patch embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, rwkv, whisper, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable            # (rng) -> params
+    forward: Callable         # (params, tokens, **kw) -> (hidden, aux, cache)
+    logits: Callable          # (params, hidden) -> logits
+    loss: Callable            # (params, batch) -> (loss, metrics)
+    init_cache: Callable      # (batch, max_len) -> cache
+    prefill: Callable         # (params, tokens, cache, **kw) -> (logits, cache)
+    decode: Callable          # (params, token, cache) -> (logits, cache)
+
+
+_FAMILIES = {
+    "dense": dense, "moe": dense, "vlm": dense,
+    "ssm": rwkv, "hybrid": zamba, "encdec": whisper,
+}
+
+
+def build(cfg) -> Model:
+    mod = _FAMILIES[cfg.family]
+    return Model(
+        cfg=cfg,
+        init=lambda rng: mod.init(cfg, rng),
+        forward=lambda params, tokens, **kw: mod.forward(cfg, params,
+                                                         tokens, **kw),
+        logits=lambda params, hidden: mod.logits_fn(cfg, params, hidden),
+        loss=lambda params, batch: mod.loss(cfg, params, batch),
+        init_cache=lambda batch, max_len: mod.init_cache(cfg, batch, max_len),
+        prefill=lambda params, tokens, cache, **kw: mod.prefill(
+            cfg, params, tokens, cache, **kw),
+        decode=lambda params, token, cache: mod.decode(cfg, params, token,
+                                                       cache),
+    )
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params)
+               if isinstance(p, jnp.ndarray))
+
+
+def active_param_count(cfg, params) -> int:
+    """MoE: routed experts count only top_k/E of expert params."""
+    total = param_count(params)
+    if not cfg.n_experts:
+        return total
+    expert = 0
+    layers = params.get("layers", {})
+    for name in ("we_g", "we_u", "we_d"):
+        if name in layers:
+            expert += layers[name].size
+    return total - expert + int(expert * cfg.top_k / cfg.n_experts)
+
+
+def train_step_fn(model: Model, optimizer):
+    """Returns a pure (params, opt_state, batch) -> (params, opt_state,
+    metrics) training step (the unit the launcher jits/lowers)."""
+
+    def step(params, opt_state, batch):
+        (l, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        metrics = dict(metrics, loss=l)
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,170 @@
+"""RWKV-6 (Finch): attention-free LM with token shift, data-dependent
+per-channel decay linear attention (time-mix) and squared-ReLU channel-mix.
+
+State per layer: (tmix prev token, cmix prev token, per-head S matrix) —
+decode is O(1) in context length, so this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.models import gla
+from repro.models.layers import rms_norm, softcap
+
+
+def _lins(rng, n, d_in, d_out):
+    ks = jax.random.split(rng, n)
+    return jax.vmap(lambda k: jax.random.normal(k, (d_in, d_out)) /
+                    jnp.sqrt(d_in))(ks)
+
+
+def init(cfg, rng):
+    keys = iter(jax.random.split(rng, 32))
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, hd = cfg.n_heads, cfg.head_dim
+    layers = {
+        "ln1": jnp.zeros((L, D)),
+        "ln2": jnp.zeros((L, D)),
+        # time-mix projections
+        "wr": _lins(next(keys), L, D, D),
+        "wk": _lins(next(keys), L, D, D),
+        "wv": _lins(next(keys), L, D, D),
+        "wg": _lins(next(keys), L, D, D),
+        "wo": _lins(next(keys), L, D, D),
+        # data-dependent decay lora: D -> 64 -> D
+        "w_lora_a": _lins(next(keys), L, D, 64),
+        "w_lora_b": _lins(next(keys), L, 64, D),
+        "w0": jnp.full((L, D), -1.0),           # decay bias
+        "u": jax.random.normal(next(keys), (L, H, hd)) * 0.1,  # bonus
+        # token-shift mixing coefficients per stream
+        "mu_tmix": jax.random.uniform(next(keys), (L, 5, D)),
+        "mu_cmix": jax.random.uniform(next(keys), (L, 1, D)),
+        "ln_x": jnp.zeros((L, D)),              # per-head output norm
+        # channel mix
+        "ck": _lins(next(keys), L, D, F),
+        "cv": _lins(next(keys), L, F, D),
+    }
+    return {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, D)) * 0.02,
+        "final_norm": jnp.zeros((D,)),
+        "layers": layers,
+    }
+
+
+def _shift(x, prev):
+    """(B, S, D) -> previous-token stream; prev (B, D) fills t=0."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _layer(cfg, x, lp, state, taps=None, layer_idx=None):
+    b, s, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    prev_t, prev_c, S = state["tmix_x"], state["cmix_x"], state["wkv"]
+
+    # ---- time mix
+    h = rms_norm(x, lp["ln1"])
+    sh = _shift(h, prev_t)
+    mu = lp["mu_tmix"].astype(h.dtype)          # (5, D)
+    xr, xk, xv, xw, xg = (h + mu[i][None, None] * (sh - h) for i in range(5))
+    if taps is not None:
+        taps.record(f"layers.{layer_idx}.attn_in", xr)
+    r = qlinear.dense(lp["wr"], xr).reshape(b, s, H, hd)
+    k = qlinear.dense(lp["wk"], xk).reshape(b, s, H, hd)
+    v = qlinear.dense(lp["wv"], xv).reshape(b, s, H, hd)
+    g = jax.nn.silu(qlinear.dense(lp["wg"], xg))
+    lora = jnp.tanh(xw.astype(jnp.float32) @ lp["w_lora_a"]) @ lp["w_lora_b"]
+    log_w = gla.clamp_log_decay(-jnp.exp(lp["w0"].astype(jnp.float32)
+                                         [None, None] + lora))
+    log_w = log_w.reshape(b, s, H, hd)
+
+    o, S = gla.gla_chunked(r, k, v, log_w, state=S)
+    # bonus: o_t += (r_t · (u ⊙ k_t)) v_t
+    bonus = jnp.einsum("bshd,hd,bshd->bsh", r.astype(jnp.float32),
+                       lp["u"].astype(jnp.float32), k.astype(jnp.float32))
+    o = o + bonus[..., None] * v.astype(jnp.float32)
+    o = rms_norm(o.reshape(b, s, d).astype(x.dtype), lp["ln_x"]) * g
+    if taps is not None:
+        taps.record(f"layers.{layer_idx}.o_in", o)
+    x = x + qlinear.dense(lp["wo"], o)
+    new_prev_t = h[:, -1]
+
+    # ---- channel mix
+    h2 = rms_norm(x, lp["ln2"])
+    sh2 = _shift(h2, prev_c)
+    xc = h2 + lp["mu_cmix"][0][None, None].astype(h2.dtype) * (sh2 - h2)
+    if taps is not None:
+        taps.record(f"layers.{layer_idx}.mlp_in", xc)
+    kk = jnp.square(jax.nn.relu(qlinear.dense(lp["ck"], xc)))
+    if taps is not None:
+        taps.record(f"layers.{layer_idx}.down_in", kk)
+    x = x + qlinear.dense(lp["cv"], kk)
+    new_state = {"tmix_x": new_prev_t, "cmix_x": h2[:, -1], "wkv": S}
+    return x, new_state
+
+
+def forward(cfg, params, tokens, *, cache=None, taps=None,
+            unroll: bool = False, extra_embed=None):
+    cd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"][tokens].astype(cd)
+    b, s, _ = x.shape
+    state = cache if cache is not None else init_cache(cfg, b, 0)
+    if unroll or taps is not None:
+        new_states = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            st = jax.tree.map(lambda a: a[i], state["layers"])
+            x, st = _layer(cfg, x, lp, st, taps=taps, layer_idx=i)
+            new_states.append(st)
+        new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *new_states)
+    else:
+        def body(x, xs):
+            lp, st = xs
+            x, st = _layer(cfg, x, lp, st)
+            if cfg.act_shard == "seq":
+                from repro.distributed.act_sharding import constrain_seq
+                x = constrain_seq(x)
+            return x, st
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        from repro.models.flags import scan as _scan
+        x, new_layers = _scan(body, x, (params["layers"], state["layers"]))
+    x = rms_norm(x, params["final_norm"])
+    new_cache = {"layers": new_layers, "pos": state["pos"] + s}
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+def logits_fn(cfg, params, hidden):
+    return softcap(hidden @ params["embed"].T.astype(hidden.dtype),
+                   cfg.logit_softcap)
+
+
+def init_cache(cfg, batch_size: int, max_len: int = 0) -> dict:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    L = cfg.n_layers
+    return {
+        "layers": {
+            "tmix_x": jnp.zeros((L, batch_size, D), jnp.bfloat16),
+            "cmix_x": jnp.zeros((L, batch_size, D), jnp.bfloat16),
+            "wkv": jnp.zeros((L, batch_size, H, hd, hd), jnp.float32),
+        },
+        "pos": jnp.int32(0),
+    }
+
+
+def loss(cfg, params, batch, **kw):
+    from repro.models.losses import chunked_ce
+    hidden, aux, _ = forward(cfg, params, batch["tokens"])
+    return chunked_ce(lambda h: logits_fn(cfg, params, h), hidden,
+                      batch["labels"], aux)
+
+
+def prefill(cfg, params, tokens, cache, extra_embed=None):
+    hidden, _, cache = forward(cfg, params, tokens, cache=cache)
+    return logits_fn(cfg, params, hidden[:, -1:]), cache
+
+
+def decode(cfg, params, token, cache):
+    hidden, _, cache = forward(cfg, params, token, cache=cache)
+    return logits_fn(cfg, params, hidden), cache

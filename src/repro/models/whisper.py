@@ -1,0 +1,239 @@
+"""Whisper-style encoder-decoder (audio backbone only; the conv/mel
+frontend is a stub — batches carry precomputed frame embeddings
+(B, enc_seq, d_model), per the assignment).
+
+Encoder: bidirectional self-attn + MLP. Decoder: causal self-attn +
+cross-attn over encoder states + MLP. Cross K/V are computed once at
+prefill and live in the cache; decode only grows the self-attn cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.models.layers import (chunked_attention, cache_update, glu_mlp,
+                                 rms_norm, softcap)
+
+MAX_DEC_POS = 32_768 + 8  # learned decoder positions (covers decode_32k)
+
+
+def _lins(rng, n, d_in, d_out):
+    ks = jax.random.split(rng, n)
+    return jax.vmap(lambda k: jax.random.normal(k, (d_in, d_out)) /
+                    jnp.sqrt(d_in))(ks)
+
+
+def init(cfg, rng):
+    keys = iter(jax.random.split(rng, 32))
+    D, F = cfg.d_model, cfg.d_ff
+    Hq, Hkv = cfg.q_dim, cfg.kv_dim
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+
+    def block(L, cross=False):
+        p = {
+            "ln1": jnp.zeros((L, D)), "ln2": jnp.zeros((L, D)),
+            "wq": _lins(next(keys), L, D, Hq),
+            "wk": _lins(next(keys), L, D, Hkv),
+            "wv": _lins(next(keys), L, D, Hkv),
+            "wo": _lins(next(keys), L, Hq, D),
+            "wg": _lins(next(keys), L, D, F),
+            "wu": _lins(next(keys), L, D, F),
+            "wd": _lins(next(keys), L, F, D),
+        }
+        if cross:
+            p.update({
+                "ln_x": jnp.zeros((L, D)),
+                "xq": _lins(next(keys), L, D, Hq),
+                "xk": _lins(next(keys), L, D, Hkv),
+                "xv": _lins(next(keys), L, D, Hkv),
+                "xo": _lins(next(keys), L, Hq, D),
+            })
+        return p
+
+    return {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, D)) * 0.02,
+        "enc_pos": jax.random.normal(next(keys), (cfg.enc_seq, D)) * 0.01,
+        "dec_pos": jax.random.normal(next(keys), (MAX_DEC_POS, D)) * 0.01,
+        "enc_norm": jnp.zeros((D,)),
+        "final_norm": jnp.zeros((D,)),
+        "enc_layers": block(Le),
+        "layers": block(Ld, cross=True),
+    }
+
+
+def _attn(cfg, h, wq, wk, wv, wo, positions, causal, kv=None, pos=None,
+          kv_const=None):
+    b, s, _ = h.shape
+    q = qlinear.dense(wq, h).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    if kv_const is not None:
+        k_att, v_att = kv_const
+        new_kv = None
+    else:
+        k = qlinear.dense(wk, h).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = qlinear.dense(wv, h).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        if kv is not None:
+            ck, cv = cache_update(kv[0], kv[1], k, v, pos)
+            k_att, v_att, new_kv = ck, cv, (ck, cv)
+        else:
+            k_att, v_att, new_kv = k, v, None
+    o = chunked_attention(q, k_att.astype(h.dtype), v_att.astype(h.dtype),
+                          q_positions=positions, causal=causal)
+    return qlinear.dense(wo, o.reshape(b, s, cfg.q_dim)), new_kv
+
+
+def encode(cfg, params, enc_embed, taps=None, unroll=False):
+    """enc_embed (B, enc_seq, D) (stub frontend output) -> encoder states."""
+    cd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = enc_embed.astype(cd) + params["enc_pos"][None].astype(cd)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        a, _ = _attn(cfg, h, lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+                     positions, causal=False)
+        x = x + a
+        x = x + glu_mlp(lp, rms_norm(x, lp["ln2"]), cfg.act)
+        return x, None
+
+    if unroll or taps is not None:
+        from repro.models.layers import activation
+        for i in range(cfg.n_enc_layers):
+            lp = jax.tree.map(lambda a: a[i], params["enc_layers"])
+            h = rms_norm(x, lp["ln1"])
+            if taps is not None:
+                taps.record(f"enc.{i}.attn_in", h)
+            a, _ = _attn(cfg, h, lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+                         positions, causal=False)
+            x = x + a
+            h2 = rms_norm(x, lp["ln2"])
+            if taps is not None:
+                taps.record(f"enc.{i}.mlp_in", h2)
+            hmid = activation(cfg.act)(qlinear.dense(lp["wg"], h2)) \
+                * qlinear.dense(lp["wu"], h2)
+            if taps is not None:
+                taps.record(f"enc.{i}.down_in", hmid)
+            x = x + qlinear.dense(lp["wd"], hmid)
+    else:
+        from repro.models.flags import scan as _scan
+        x, _ = _scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def forward(cfg, params, tokens, *, enc_embed=None, enc_states=None,
+            cache=None, taps=None, unroll=False, extra_embed=None):
+    cd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if enc_states is None:
+        if enc_embed is None and cache is not None:
+            enc_states = cache["enc_states"]
+        else:
+            enc_states = encode(cfg, params, enc_embed, taps=taps,
+                                unroll=unroll)
+    b, s = tokens.shape
+    pos = cache["pos"] if cache is not None else jnp.int32(0)
+    positions = pos + jnp.arange(s, dtype=jnp.int32)
+    x = params["embed"][tokens].astype(cd) \
+        + params["dec_pos"][positions].astype(cd)[None]
+    enc_positions = jnp.arange(enc_states.shape[1], dtype=jnp.int32)
+
+    def layer(x, lp, kv, idx=None):
+        def tap(name, val):
+            if taps is not None and idx is not None:
+                taps.record(f"layers.{idx}.{name}", val)
+        h = rms_norm(x, lp["ln1"])
+        tap("attn_in", h)
+        a, new_kv = _attn(cfg, h, lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+                          positions, causal=True, kv=kv, pos=pos)
+        x = x + a
+        hx = rms_norm(x, lp["ln_x"])
+        tap("cross_in", hx)
+        # cross-attention: keys/values from encoder states (full, non-causal)
+        bq, sq, _ = hx.shape
+        q = qlinear.dense(lp["xq"], hx).reshape(bq, sq, cfg.n_heads,
+                                                cfg.head_dim)
+        kx = qlinear.dense(lp["xk"], enc_states).reshape(
+            bq, -1, cfg.n_kv_heads, cfg.head_dim)
+        vx = qlinear.dense(lp["xv"], enc_states).reshape(
+            bq, -1, cfg.n_kv_heads, cfg.head_dim)
+        ox = chunked_attention(q, kx.astype(x.dtype), vx.astype(x.dtype),
+                               q_positions=positions, causal=False)
+        x = x + qlinear.dense(lp["xo"], ox.reshape(bq, sq, cfg.q_dim))
+        h2 = rms_norm(x, lp["ln2"])
+        tap("mlp_in", h2)
+        from repro.models.layers import activation
+        hmid = activation(cfg.act)(qlinear.dense(lp["wg"], h2)) \
+            * qlinear.dense(lp["wu"], h2)
+        tap("down_in", hmid)
+        x = x + qlinear.dense(lp["wd"], hmid)
+        return x, new_kv
+
+    if unroll or taps is not None:
+        new_k, new_v = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            kv = ((cache["k"][i], cache["v"][i])
+                  if cache is not None else None)
+            x, new_kv = layer(x, lp, kv, idx=i)
+            if new_kv is not None:
+                new_k.append(new_kv[0])
+                new_v.append(new_kv[1])
+        ys = (jnp.stack(new_k), jnp.stack(new_v)) if new_k else None
+    else:
+        def body(x, xs):
+            if cache is not None:
+                lp, ck, cv = xs
+                x, new_kv = layer(x, lp, (ck, cv))
+                return x, new_kv
+            x, _ = layer(x, xs, None)
+            return x, None  # noqa: E501 — scan body shared with cache path
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = ((params["layers"], cache["k"], cache["v"])
+              if cache is not None else params["layers"])
+        from repro.models.flags import scan as _scan
+        x, ys = _scan(body, x, xs)
+
+    x = rms_norm(x, params["final_norm"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": ys[0], "v": ys[1], "pos": pos + s,
+                     "enc_states": enc_states}
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+def logits_fn(cfg, params, hidden):
+    return softcap(hidden @ params["embed"].T.astype(hidden.dtype),
+                   cfg.logit_softcap)
+
+
+def loss(cfg, params, batch, **kw):
+    from repro.models.losses import chunked_ce
+    hidden, aux, _ = forward(cfg, params, batch["tokens"],
+                             enc_embed=batch["enc_embed"])
+    return chunked_ce(lambda h: logits_fn(cfg, params, h), hidden,
+                      batch["labels"], aux)
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, jnp.bfloat16),
+            "v": jnp.zeros(shape, jnp.bfloat16),
+            "pos": jnp.int32(0),
+            "enc_states": jnp.zeros((batch_size, cfg.enc_seq, cfg.d_model),
+                                    jnp.bfloat16)}
+
+
+def prefill(cfg, params, tokens, cache, enc_embed=None, extra_embed=None):
+    enc_states = encode(cfg, params, enc_embed) if enc_embed is not None \
+        else cache["enc_states"]
+    cache = dict(cache, enc_states=enc_states)
+    hidden, _, cache = forward(cfg, params, tokens, enc_states=enc_states,
+                               cache=cache)
+    return logits_fn(cfg, params, hidden[:, -1:]), cache
+
+
+def decode(cfg, params, token, cache):
+    hidden, _, cache = forward(cfg, params, token, cache=cache)
+    return logits_fn(cfg, params, hidden), cache

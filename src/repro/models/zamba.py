@@ -1,0 +1,319 @@
+"""Zamba2 hybrid: Mamba-2 (SSD) backbone with a *shared* attention+MLP
+block invoked every `attn_every` layers (one set of attention weights,
+reused at every invocation site — the Zamba trick).
+
+Mamba-2 blocks use the shared GLA core with per-head scalar decay
+(SSD ≡ linear attention with scalar gate): decay from softplus(dt)·exp(A),
+B/C projections play k/r, a depthwise causal conv precedes the SSM, and a
+gated (silu z) output path follows it.
+
+Decode state: per-layer (conv tail (B, convw-1, Cin), SSD state
+(B, H, state, hd)) + KV caches for each shared-attn invocation site —
+O(1) in context for the mamba part, so this arch runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.models import gla
+from repro.models.layers import (chunked_attention, cache_update, glu_mlp,
+                                 rms_norm, rope, softcap)
+
+CONV_W = 4
+
+
+def _d_inner(cfg):
+    return 2 * cfg.d_model
+
+
+def _hd(cfg):
+    return _d_inner(cfg) // cfg.ssm_heads
+
+
+def _conv_ch(cfg):
+    return _d_inner(cfg) + 2 * cfg.ssm_state
+
+
+def n_attn_sites(cfg) -> int:
+    return -(-cfg.n_layers // cfg.attn_every)
+
+
+def init(cfg, rng):
+    keys = iter(jax.random.split(rng, 32))
+    L, D = cfg.n_layers, cfg.d_model
+    di, st, H = _d_inner(cfg), cfg.ssm_state, cfg.ssm_heads
+
+    def lins(n, d_in, d_out):
+        ks = jax.random.split(next(keys), n)
+        return jax.vmap(lambda k: jax.random.normal(k, (d_in, d_out)) /
+                        jnp.sqrt(d_in))(ks)
+
+    # separate projections (not one fused in_proj) => every weight's output
+    # dim is cleanly TP-shardable (standard Mamba TP split; DESIGN.md §4)
+    mamba = {
+        "ln": jnp.zeros((L, D)),
+        "in_x": lins(L, D, di),
+        "in_z": lins(L, D, di),
+        "in_b": lins(L, D, st),
+        "in_c": lins(L, D, st),
+        "in_dt": lins(L, D, H),
+        "conv_w": jax.random.normal(next(keys), (L, CONV_W, _conv_ch(cfg)))
+                  * 0.2,
+        "a_log": jnp.zeros((L, H)),
+        "dt_bias": jnp.zeros((L, H)),
+        "d_skip": jnp.ones((L, H)),
+        "ln_out": jnp.zeros((L, di)),
+        "out_proj": lins(L, di, D),
+    }
+    Hq, Hkv = cfg.q_dim, cfg.kv_dim
+
+    def lin1(d_in, d_out):
+        return (jax.random.normal(next(keys), (d_in, d_out)) /
+                jnp.sqrt(d_in))
+
+    shared = {  # ONE block, reused at every site
+        "ln1": jnp.zeros((D,)), "ln2": jnp.zeros((D,)),
+        "wq": lin1(D, Hq), "wk": lin1(D, Hkv), "wv": lin1(D, Hkv),
+        "wo": lin1(Hq, D),
+        "wg": lin1(D, cfg.d_ff), "wu": lin1(D, cfg.d_ff),
+        "wd": lin1(cfg.d_ff, D),
+    }
+    return {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, D)) * 0.02,
+        "final_norm": jnp.zeros((D,)),
+        "mamba": mamba,
+        "shared_attn": shared,
+    }
+
+
+def _causal_conv(x, w, tail):
+    """Depthwise causal conv: x (B, S, C), w (CONV_W, C), tail (B, CONV_W-1, C).
+    Returns (y (B, S, C), new_tail)."""
+    xx = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xx[:, i:i + x.shape[1]] * w[i][None, None] for i in range(CONV_W))
+    new_tail = xx[:, -(CONV_W - 1):] if CONV_W > 1 else tail
+    return jax.nn.silu(y), new_tail
+
+
+def _mamba_layer(cfg, x, lp, state, taps=None, layer_idx=None):
+    b, s, d = x.shape
+    di, stt, H = _d_inner(cfg), cfg.ssm_state, cfg.ssm_heads
+    hd = _hd(cfg)
+    h = rms_norm(x, lp["ln"])
+    if taps is not None:
+        taps.record(f"layers.{layer_idx}.mamba_in", h)
+    xs_ = qlinear.dense(lp["in_x"], h)
+    z = qlinear.dense(lp["in_z"], h)
+    bmat = qlinear.dense(lp["in_b"], h)
+    cmat = qlinear.dense(lp["in_c"], h)
+    dt = qlinear.dense(lp["in_dt"], h)
+    conv_in = jnp.concatenate([xs_, bmat, cmat], axis=-1)
+    conv_out, new_tail = _causal_conv(conv_in, lp["conv_w"], state["conv"])
+    xs_, bmat, cmat = jnp.split(conv_out, [di, di + stt], axis=-1)
+
+    # SSD: scalar per-head decay; B/C shared across heads — the factored
+    # chunked form (§Perf B1) never materializes (B,S,H,state) broadcasts
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + lp["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    log_w = gla.clamp_log_decay(-dtp * jnp.exp(lp["a_log"].astype(jnp.float32)))
+    v = (xs_.reshape(b, s, H, hd)
+         * dtp.astype(xs_.dtype)[..., None])             # dt-scaled input
+    if s == 1:
+        o, S = gla.ssd_decode_step(cmat[:, 0], bmat[:, 0], v[:, 0],
+                                   log_w[:, 0], state["ssd"])
+        o = o[:, None]
+    else:
+        o, S = gla.ssd_chunked(cmat, bmat, v, log_w, state=state["ssd"])
+    o = o + lp["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs_.reshape(b, s, H, hd).astype(jnp.float32)
+    o = o.reshape(b, s, di).astype(x.dtype) * jax.nn.silu(z)
+    o = rms_norm(o, lp["ln_out"])
+    if taps is not None:
+        taps.record(f"layers.{layer_idx}.mamba_out_in", o)
+    x = x + qlinear.dense(lp["out_proj"], o)
+    return x, {"conv": new_tail, "ssd": S}
+
+
+def _shared_attn_block(cfg, x, sp, kv, pos, positions, taps=None, site=None):
+    b, s, d = x.shape
+    h = rms_norm(x, sp["ln1"])
+    if taps is not None:
+        taps.record(f"shared.{site}.attn_in", h)
+    q = qlinear.dense(sp["wq"], h).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = qlinear.dense(sp["wk"], h).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = qlinear.dense(sp["wv"], h).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if kv is not None:
+        ck, cv = cache_update(kv[0], kv[1], k, v, pos)
+        k_att, v_att = ck, cv
+        kv = (ck, cv)
+    else:
+        k_att, v_att = k, v
+    o = chunked_attention(q, k_att.astype(x.dtype), v_att.astype(x.dtype),
+                          q_positions=positions, causal=True)
+    o = o.reshape(b, s, cfg.q_dim)
+    if taps is not None:
+        taps.record(f"shared.{site}.o_in", o)
+    x = x + qlinear.dense(sp["wo"], o)
+    h2 = rms_norm(x, sp["ln2"])
+    if taps is not None:
+        taps.record(f"shared.{site}.mlp_in", h2)
+    from repro.models.layers import activation
+    hmid = activation(cfg.act)(qlinear.dense(sp["wg"], h2)) \
+        * qlinear.dense(sp["wu"], h2)
+    if taps is not None:
+        taps.record(f"shared.{site}.down_in", hmid)
+    x = x + qlinear.dense(sp["wd"], hmid)
+    return x, kv
+
+
+def forward(cfg, params, tokens, *, cache=None, taps=None,
+            unroll: bool = False, extra_embed=None):
+    cd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"][tokens].astype(cd)
+    b, s, _ = x.shape
+    state = cache if cache is not None else init_cache(cfg, b, 0)
+    pos = state["pos"]
+    positions = pos + jnp.arange(s, dtype=jnp.int32)
+    E = cfg.attn_every
+    sites = n_attn_sites(cfg)
+    new_kv = []
+    new_m = []
+    if unroll or taps is not None:
+        for g in range(sites):
+            kv_g = None
+            if state["attn_k"] is not None:
+                kv_g = (state["attn_k"][g], state["attn_v"][g])
+            x, kv_g = _shared_attn_block(cfg, x, params["shared_attn"],
+                                         kv_g, pos, positions, taps, g)
+            if kv_g is not None:
+                new_kv.append(kv_g)
+            for i in range(g * E, min((g + 1) * E, cfg.n_layers)):
+                lp = jax.tree.map(lambda a: a[i], params["mamba"])
+                st = jax.tree.map(lambda a: a[i], state["mamba"])
+                x, st = _mamba_layer(cfg, x, lp, st, taps=taps, layer_idx=i)
+                new_m.append(st)
+    else:
+        # §Perf B2/B3: the whole backbone is ONE scan over homogeneous
+        # (shared-attn + E mamba layers) groups — unrolled Python-loop
+        # segments were assigned DISTINCT backward buffers (9+ GiB/site,
+        # 14 sites live simultaneously). Nested remat: checkpointed layer
+        # body inside a checkpointed group body — peak residency becomes
+        # one layer's internals + 29 MB SP-sharded carries.
+        from repro.models.flags import scan as _scan
+
+        def layer_body(x, xs):
+            lp, st = xs
+            x, st = _mamba_layer(cfg, x, lp, st)
+            if cfg.act_shard == "seq":
+                from repro.distributed.act_sharding import constrain_seq
+                x = constrain_seq(x)
+            return x, st
+
+        inner = jax.checkpoint(layer_body) if cfg.remat else layer_body
+
+        def group_body(x, xs):
+            gp, gs, kv_g = xs
+            x, kv_g = _shared_attn_block(cfg, x, params["shared_attn"],
+                                         kv_g, pos, positions, None, None)
+            x, st_g = _scan(inner, x, (gp, gs))
+            return x, (kv_g, st_g)
+
+        outer = jax.checkpoint(group_body) if cfg.remat else group_body
+
+        n_full = cfg.n_layers // E
+        rem = cfg.n_layers - n_full * E
+        regroup = lambda a: a[:n_full * E].reshape(n_full, E, *a.shape[1:])
+        gm = jax.tree.map(regroup, params["mamba"])
+        gst = jax.tree.map(regroup, state["mamba"])
+        if state["attn_k"] is not None:
+            kv_xs = (state["attn_k"][:n_full], state["attn_v"][:n_full])
+        else:
+            kv_xs = (None, None)
+        x, (kv_ys, st_ys) = _scan(
+            lambda c, xs: outer(c, (xs[0], xs[1],
+                                    (xs[2], xs[3]) if xs[2] is not None
+                                    else None)),
+            x, (gm, gst, kv_xs[0], kv_xs[1]))
+        ungroup = lambda a: a.reshape(n_full * E, *a.shape[2:])
+        new_m.append(jax.tree.map(ungroup, st_ys))
+        if kv_ys is not None:
+            new_kv.append(kv_ys)
+
+        if rem:  # trailing site: attn + remaining layers
+            kv_g = None
+            if state["attn_k"] is not None:
+                kv_g = (state["attn_k"][n_full], state["attn_v"][n_full])
+            x, kv_g = _shared_attn_block(cfg, x, params["shared_attn"],
+                                         kv_g, pos, positions, None, None)
+            sl = lambda a: a[n_full * E:]
+            x, st_t = _scan(inner, x, (jax.tree.map(sl, params["mamba"]),
+                                       jax.tree.map(sl, state["mamba"])))
+            new_m.append(st_t)
+            if kv_g is not None:
+                new_kv.append(jax.tree.map(lambda a: a[None], kv_g))
+    x = rms_norm(x, params["final_norm"])
+    if unroll or taps is not None:
+        new_mamba = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+        attn_k = jnp.stack([kv[0] for kv in new_kv]) if new_kv else None
+        attn_v = jnp.stack([kv[1] for kv in new_kv]) if new_kv else None
+    else:
+        new_mamba = (new_m[0] if len(new_m) == 1 else
+                     jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_m))
+        attn_k = jnp.concatenate([kv[0] for kv in new_kv]) if new_kv \
+            else None
+        attn_v = jnp.concatenate([kv[1] for kv in new_kv]) if new_kv \
+            else None
+    new_cache = {
+        "mamba": new_mamba,
+        "attn_k": attn_k,
+        "attn_v": attn_v,
+        "pos": pos + s,
+    }
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+def logits_fn(cfg, params, hidden):
+    return softcap(hidden @ params["embed"].T.astype(hidden.dtype),
+                   cfg.logit_softcap)
+
+
+def init_cache(cfg, batch_size: int, max_len: int = 0) -> dict:
+    L, H, stt = cfg.n_layers, cfg.ssm_heads, cfg.ssm_state
+    hd = _hd(cfg)
+    sites = n_attn_sites(cfg)
+    cache = {
+        "mamba": {
+            "conv": jnp.zeros((L, batch_size, CONV_W - 1, _conv_ch(cfg)),
+                              jnp.bfloat16),
+            "ssd": jnp.zeros((L, batch_size, H, stt, hd), jnp.float32),
+        },
+        "attn_k": None,
+        "attn_v": None,
+        "pos": jnp.int32(0),
+    }
+    if max_len > 0:
+        shape = (sites, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+        cache["attn_k"] = jnp.zeros(shape, jnp.bfloat16)
+        cache["attn_v"] = jnp.zeros(shape, jnp.bfloat16)
+    return cache
+
+
+def loss(cfg, params, batch, **kw):
+    from repro.models.losses import chunked_ce
+    hidden, aux, _ = forward(cfg, params, batch["tokens"])
+    return chunked_ce(lambda h: logits_fn(cfg, params, h), hidden,
+                      batch["labels"], aux)
+
+
+def prefill(cfg, params, tokens, cache, extra_embed=None):
+    hidden, _, cache = forward(cfg, params, tokens, cache=cache)
+    return logits_fn(cfg, params, hidden[:, -1:]), cache
+
+
+def decode(cfg, params, token, cache):
+    hidden, _, cache = forward(cfg, params, token, cache=cache)
+    return logits_fn(cfg, params, hidden), cache

@@ -1,0 +1,1 @@
+from repro.optim.optimizer import AdamW, warmup_cosine  # noqa: F401

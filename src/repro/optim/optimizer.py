@@ -1,0 +1,117 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping.
+
+Self-contained (no optax in this environment). States are f32; params may
+be f32 or bf16 (updates computed in f32 and cast back).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    def init(self, params) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], gf)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], gf)
+        t = step.astype(jnp.float32)
+        mhat_c = 1.0 / (1 - b1 ** t)
+        vhat_c = 1.0 / (1 - b2 ** t)
+
+        def upd(p, m_, v_):
+            u = (m_ * mhat_c) / (jnp.sqrt(v_ * vhat_c) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWMaster(AdamW):
+    """Mixed-precision variant: bf16 working params, f32 master copy kept
+    in the optimizer state (ZeRO-1 friendly — master/m/v all carry an
+    extra data-axis sharding; GSPMD turns the update into
+    reduce-scatter(grads) -> sharded update -> all-gather(params))."""
+
+    def init(self, params) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "master": jax.tree.map(lambda p: p.astype(jnp.float32),
+                                       params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], gf)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], gf)
+        t = step.astype(jnp.float32)
+        mhat_c = 1.0 / (1 - b1 ** t)
+        vhat_c = 1.0 / (1 - b2 ** t)
+
+        def upd(mast, m_, v_):
+            u = (m_ * mhat_c) / (jnp.sqrt(v_ * vhat_c) + self.eps)
+            return mast - lr * (u + self.weight_decay * mast)
+
+        master = jax.tree.map(upd, state["master"], m, v)
+        new_params = jax.tree.map(lambda mast, p: mast.astype(p.dtype),
+                                  master, params)
+        return new_params, {"m": m, "v": v, "master": master, "step": step}
+
+
+def cast_params(params, dtype):
+    """Cast float params (not int codes / not norms' f32 need) to dtype."""
+    def cast(p):
+        if p.dtype in (jnp.float32, jnp.float64, jnp.bfloat16, jnp.float16):
+            return p.astype(dtype)
+        return p
+    return jax.tree.map(cast, params)

@@ -1,0 +1,102 @@
+"""Chunked attention unit tests: oracle equivalence, masks, GQA, windows,
+softcap, int8-KV dequant path, decode positions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import chunked_attention, quantize_kv, softcap
+
+
+def _naive(q, k, v, q_pos, causal=True, window=None, cap=0.0):
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * hd**-0.5
+    s = softcap(s, cap)
+    kv_pos = jnp.arange(skv)
+    mask = jnp.ones((b, sq, skv), bool)
+    if causal:
+        mask &= q_pos[:, :, None] >= kv_pos[None, None, :]
+    if window is not None:
+        mask &= (q_pos[:, :, None] - kv_pos[None, None, :]) < window
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+
+
+def _mk(seed, b=2, sq=24, skv=24, h=4, kvh=2, hd=16):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((b, skv, kvh, hd)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((b, skv, kvh, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 64])
+@pytest.mark.parametrize("window", [None, 7])
+def test_matches_naive(chunk, window):
+    q, k, v = _mk(0)
+    qp = jnp.broadcast_to(jnp.arange(24), (2, 24))
+    got = chunked_attention(q, k, v, q_positions=qp, causal=True,
+                            window=window, kv_chunk=chunk)
+    want = _naive(q, k, v, qp, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_softcap_matches_naive():
+    q, k, v = _mk(1)
+    qp = jnp.broadcast_to(jnp.arange(24), (2, 24))
+    got = chunked_attention(q, k, v, q_positions=qp, attn_softcap=5.0,
+                            kv_chunk=8)
+    want = _naive(q, k, v, qp, cap=5.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_position_mid_cache():
+    """Query at pos 10 in a 24-slot cache: slots >10 (garbage) masked."""
+    q, k, v = _mk(2, sq=1)
+    k = k.at[:, 11:].set(1e3)  # poison the unwritten region
+    v = v.at[:, 11:].set(1e3)
+    qp = jnp.full((2, 1), 10)
+    got = chunked_attention(q, k, v, q_positions=qp, kv_chunk=8)
+    want = _naive(q, k[:, :11], v[:, :11],
+                  qp)  # only valid prefix
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_int8_kv_tuple_path():
+    q, k, v = _mk(3)
+    qp = jnp.broadcast_to(jnp.arange(24), (2, 24))
+    kq, ks = quantize_kv(k, 8)
+    vq, vs = quantize_kv(v, 8)
+    got = chunked_attention(q, (kq, ks), (vq, vs), q_positions=qp,
+                            kv_chunk=8)
+    want = _naive(k=jnp.asarray(kq, jnp.float32) * ks,
+                  v=jnp.asarray(vq, jnp.float32) * vs, q=q, q_pos=qp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    # and int8 quant is close to fp attention
+    full = _naive(q, k, v, qp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=0.15, atol=0.05)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 9999), chunk=st.sampled_from([3, 5, 16]),
+       skv=st.integers(8, 40))
+def test_property_chunking_invariance(seed, chunk, skv):
+    """Output is invariant to chunk size (incl. non-divisible chunks)."""
+    q, k, v = _mk(seed, sq=8, skv=skv)
+    qp = jnp.broadcast_to(jnp.arange(8) + (skv - 8), (2, 8))
+    a = chunked_attention(q, k, v, q_positions=qp, kv_chunk=chunk)
+    b = chunked_attention(q, k, v, q_positions=qp, kv_chunk=skv)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,100 @@
+"""Unit + property tests for repro.core.quantizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as Q
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_symmetric_roundtrip_exact_levels():
+    spec = Q.QuantSpec(bits=4, symmetric=True, per="tensor")
+    # Values exactly on the grid (max|x| = qmax*scale) must be preserved.
+    scale = 0.1
+    grid = jnp.arange(-spec.qmax, spec.qmax + 1) * scale
+    out = Q.fake_quant(grid, spec)
+    np.testing.assert_allclose(out, grid, atol=1e-6)
+
+
+def test_asymmetric_handles_shifted_data():
+    spec_s = Q.QuantSpec(bits=4, symmetric=True, per="tensor")
+    spec_a = Q.QuantSpec(bits=4, symmetric=False, per="tensor")
+    x = jnp.linspace(10.0, 11.0, 256)  # strongly shifted
+    err_s = jnp.mean((Q.fake_quant(x, spec_s) - x) ** 2)
+    err_a = jnp.mean((Q.fake_quant(x, spec_a) - x) ** 2)
+    assert err_a < err_s / 10.0  # asymmetric drastically better (paper §2.1)
+
+
+def test_per_token_independent_scales():
+    spec = Q.act_spec(8)
+    x = jnp.stack([jnp.ones(64) * 1e-3, jnp.ones(64) * 1e3])
+    out = Q.fake_quant(x, spec)
+    np.testing.assert_allclose(out, x, rtol=1e-2)  # each token gets own scale
+
+
+def test_per_channel_weight_scales():
+    spec = Q.weight_spec(8, range_p=None)
+    w = jnp.stack([jnp.linspace(-1e-3, 1e-3, 64), jnp.linspace(-1e3, 1e3, 64)])
+    out = Q.fake_quant(w, spec)
+    np.testing.assert_allclose(out, w, rtol=1e-1, atol=1e-5)
+
+
+def test_lp_range_beats_absmax_with_outlier():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((8, 512)).astype(np.float32)
+    w[:, 0] *= 50.0  # heavy outlier per row
+    spec_mm = Q.QuantSpec(bits=4, symmetric=True, per="channel")
+    spec_lp = Q.QuantSpec(bits=4, symmetric=True, per="channel", range_p=2.4)
+    err_mm = float(jnp.mean((Q.fake_quant(jnp.asarray(w), spec_mm) - w) ** 2))
+    err_lp = float(jnp.mean((Q.fake_quant(jnp.asarray(w), spec_lp) - w) ** 2))
+    assert err_lp < err_mm
+
+
+def test_int_codes_in_range():
+    spec = Q.QuantSpec(bits=4, symmetric=True, per="channel")
+    w = jnp.asarray(np.random.default_rng(1).standard_normal((16, 32)), jnp.float32)
+    q, scale, zp = Q.quantize(w, spec)
+    assert q.dtype == jnp.int8
+    assert int(q.min()) >= spec.qmin and int(q.max()) <= spec.qmax
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    symmetric=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_quant_error_bounded_by_half_step(bits, symmetric, seed):
+    """|x - Q(x)| <= scale/2 for in-range values (uniform quantizer invariant)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256) * rng.uniform(0.1, 10), jnp.float32)
+    spec = Q.QuantSpec(bits=bits, symmetric=symmetric, per="tensor")
+    scale, zp = Q.compute_scale_zp(x, spec)
+    out = Q.fake_quant(x, spec, scale, zp)
+    # zero-point rounding in asymmetric mode costs at most one extra step;
+    # 1% slack covers float32 rounding at the clip boundary.
+    bound = (0.5 + (0.0 if symmetric else 0.5)) * float(scale.max()) * 1.01 + 1e-6
+    assert float(jnp.max(jnp.abs(out - x))) <= bound
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(3, 8))
+def test_property_more_bits_less_error(seed, bits):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    spec_lo = Q.act_spec(bits)
+    spec_hi = Q.act_spec(bits + 1)
+    err_lo = float(jnp.mean((Q.fake_quant(x, spec_lo) - x) ** 2))
+    err_hi = float(jnp.mean((Q.fake_quant(x, spec_hi) - x) ** 2))
+    assert err_hi <= err_lo + 1e-12
+
+
+def test_quant_range_definitions():
+    x = jnp.asarray([[1.0, -2.0, 3.0]])
+    sym = Q.QuantSpec(bits=4, symmetric=True, per="token")
+    asym = Q.QuantSpec(bits=4, symmetric=False, per="token")
+    np.testing.assert_allclose(Q.quant_range(x, sym), [6.0])   # 2*max|x|
+    np.testing.assert_allclose(Q.quant_range(x, asym), [5.0])  # max - min

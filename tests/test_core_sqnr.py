@@ -1,0 +1,127 @@
+"""Tests for the SQNR / Concentration / Alignment framework (paper §2).
+
+These validate the paper's *claims*:
+  - Theorem 2.4 approximation tracks measured SQNR (Fig. 2)
+  - alignment is rotation-invariant (eq. 4)
+  - +1 bit ≈ +6 dB (§2.1)
+  - optimal alignment bound (eq. 9) upper-bounds any invertible transform
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sqnr as S
+from repro.core import transforms as T
+from repro.core.quantizers import act_spec, weight_spec
+
+
+def _layer(seed, n=512, d_in=128, d_out=96, outliers=True):
+    rng = np.random.default_rng(seed)
+    # correlated activations with heavy-tailed channels (LLM-like)
+    mix = rng.standard_normal((d_in, d_in)) / np.sqrt(d_in)
+    x = rng.standard_normal((n, d_in)) @ mix
+    if outliers:
+        hot = rng.choice(d_in, size=3, replace=False)
+        x[:, hot] *= 20.0
+    w = rng.standard_normal((d_out, d_in)) / np.sqrt(d_in)
+    return jnp.asarray(w, jnp.float32), jnp.asarray(x, jnp.float32)
+
+
+def test_theorem_2_4_tracks_measured_sqnr():
+    """Fig. 2: approximation within a few dB for 5-50 dB layers."""
+    for bits in [(4, 4), (4, 8), (8, 8)]:
+        bw, bx = bits
+        for seed in range(5):
+            w, x = _layer(seed)
+            wspec, xspec = weight_spec(bw, range_p=None), act_spec(bx)
+            meas = float(S.db(S.sqnr_quantized_layer(w, x, wspec, xspec)))
+            appr = float(S.db(S.sqnr_approx_joint(w, x, wspec, xspec)))
+            if 5.0 < meas < 50.0:
+                assert abs(meas - appr) < 3.0, (bits, seed, meas, appr)
+
+
+def test_lemma_2_1_parallel_combination():
+    w, x = _layer(0)
+    wspec, xspec = weight_spec(4, range_p=None), act_spec(4)
+    joint = S.sqnr_quantized_layer(w, x, wspec, xspec)
+    combo = S.parallel(S.sqnr_act_only(w, x, xspec), S.sqnr_weight_only(w, x, wspec))
+    assert abs(float(S.db(joint)) - float(S.db(combo))) < 1.5
+
+
+def test_alignment_rotation_invariant():
+    """Eq. 4: A(Rx, WRᵀ) = A(x, W) for any orthogonal R."""
+    w, x = _layer(1)
+    rng = np.random.default_rng(2)
+    rot = T.make_rotation(x.shape[1], rng)
+    a0 = float(S.alignment(w, x))
+    xr = T.apply(rot, x)
+    wr = T.fuse_weight(rot, w)
+    a1 = float(S.alignment(wr, xr))
+    np.testing.assert_allclose(a0, a1, rtol=1e-4)
+
+
+def test_alignment_hadamard_invariant():
+    w, x = _layer(3)
+    had = T.make_hadamard(x.shape[1], np.random.default_rng(0))
+    a0 = float(S.alignment(w, x))
+    a1 = float(S.alignment(T.fuse_weight(had, w), T.apply(had, x)))
+    np.testing.assert_allclose(a0, a1, rtol=1e-4)
+
+
+def test_six_db_per_bit():
+    """§2.1: each extra (joint) bit adds ≈6 dB."""
+    w, x = _layer(4, outliers=False)
+    dbs = []
+    for b in (4, 5, 6, 7, 8):
+        dbs.append(float(S.db(S.sqnr_quantized_layer(
+            w, x, weight_spec(b, range_p=None), act_spec(b)))))
+    deltas = np.diff(dbs)
+    assert np.all(deltas > 4.0) and np.all(deltas < 8.0), dbs
+
+
+def test_alignment_bounded_by_optimum():
+    from repro.core import cat as C
+    w, x = _layer(5)
+    sigma_x = jnp.asarray(np.asarray(x, np.float64).T @ np.asarray(x, np.float64)
+                          / x.shape[0], jnp.float32)
+    a_star = float(S.alignment_optimal(w, sigma_x))
+    a_now = float(S.alignment_from_cov(w, sigma_x))
+    assert a_now <= a_star * (1 + 1e-3)
+    # random invertible transforms cannot beat the bound either
+    rng = np.random.default_rng(6)
+    for _ in range(3):
+        m = jnp.asarray(rng.standard_normal((x.shape[1], x.shape[1]))
+                        + 3 * np.eye(x.shape[1]), jnp.float32)
+        wt = w @ jnp.linalg.inv(m)
+        st_ = m @ sigma_x @ m.T
+        assert float(S.alignment_from_cov(wt, st_)) <= a_star * (1 + 1e-3)
+
+
+def test_alignment_from_cov_matches_empirical():
+    w, x = _layer(7)
+    sigma_x = x.T @ x / x.shape[0]
+    np.testing.assert_allclose(float(S.alignment(w, x)),
+                               float(S.alignment_from_cov(w, sigma_x)), rtol=1e-3)
+
+
+def test_concentration_extremes():
+    """Collapsed distribution -> C large; single non-zero value -> sym C=1/4."""
+    spec = act_spec(4)
+    x_spike = jnp.zeros((4, 64)).at[:, 0].set(1.0)
+    sym = S.concentration_act(x_spike, weight_spec(4, range_p=None).__class__(
+        bits=4, symmetric=True, per="token"))
+    np.testing.assert_allclose(float(sym), 0.25, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_concentration_scale_invariant(seed):
+    w, x = _layer(seed)
+    spec = act_spec(4)
+    c1 = float(S.concentration_act(x, spec))
+    c2 = float(S.concentration_act(x * 37.5, spec))
+    np.testing.assert_allclose(c1, c2, rtol=1e-4)
+    a1 = float(S.alignment(w, x))
+    a2 = float(S.alignment(w * 0.01, x * 100.0))
+    np.testing.assert_allclose(a1, a2, rtol=1e-3)

@@ -1,0 +1,218 @@
+"""Tests for transforms + CAT construction (paper §3-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cat as C
+from repro.core import sqnr as S
+from repro.core import transforms as T
+from repro.core.hadamard import hadamard_matrix
+from repro.core.quantizers import act_spec, weight_spec
+
+
+def _layer(seed, n=1024, d_in=128, d_out=96):
+    rng = np.random.default_rng(seed)
+    mix = rng.standard_normal((d_in, d_in)) / np.sqrt(d_in)
+    scales = np.exp(rng.standard_normal(d_in))  # per-channel spread
+    x = (rng.standard_normal((n, d_in)) @ mix) * scales
+    x[:, rng.choice(d_in, 2, replace=False)] *= 15.0
+    w = rng.standard_normal((d_out, d_in)) / np.sqrt(d_in)
+    w *= np.exp(0.5 * rng.standard_normal(d_in))[None, :]
+    return jnp.asarray(w, jnp.float32), jnp.asarray(x, jnp.float32)
+
+
+def _sigma(x):
+    x64 = np.asarray(x, np.float64)
+    return jnp.asarray(x64.T @ x64 / x.shape[0], jnp.float32)
+
+
+def _sigma_w(w):
+    return jnp.asarray(np.asarray(w, np.float64).T @ np.asarray(w, np.float64),
+                       jnp.float32)
+
+
+# ----------------------------------------------------------------- fusion --
+
+@pytest.mark.parametrize("kind", ["scale", "hadamard", "rotation", "block",
+                                  "cat_full", "cat_block", "cat_block_h"])
+def test_function_preservation(kind):
+    """(W T⁻¹)(T x) == W x for every transform kind."""
+    w, x = _layer(0)
+    rng = np.random.default_rng(1)
+    sw, sx = _sigma_w(w), _sigma(x)
+    t = {
+        "scale": T.Scale(jnp.asarray(rng.uniform(0.5, 2.0, x.shape[1]), jnp.float32)),
+        "hadamard": T.make_hadamard(x.shape[1], rng),
+        "rotation": T.make_rotation(x.shape[1], rng),
+        "block": T.make_cat_block(sw, sx, k=32, hadamard=False),
+        "cat_full": T.make_cat_full(sw, sx),
+        "cat_block": T.make_cat_block(sw, sx, k=32, hadamard=False),
+        "cat_block_h": T.make_cat_block(sw, sx, k=32, hadamard=True, rng=rng),
+    }[kind]
+    y0 = x @ w.T
+    y1 = T.apply(t, x) @ T.fuse_weight(t, w).T
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=2e-3, atol=2e-3)
+
+
+def test_fuse_cov_consistent_with_apply():
+    w, x = _layer(2)
+    sx = _sigma(x)
+    for t in (T.make_hadamard(x.shape[1], np.random.default_rng(0)),
+              T.make_cat_block(_sigma_w(w), sx, k=16, hadamard=True,
+                               rng=np.random.default_rng(1))):
+        xt = T.apply(t, x)
+        direct = _sigma(xt)
+        fused = T.fuse_cov(t, sx)
+        np.testing.assert_allclose(np.asarray(direct), np.asarray(fused),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_hadamard_apply_equals_dense_matrix():
+    d = 96  # 96 = 8 * 12 exercises the Paley path
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, d)), jnp.float32)
+    t = T.make_hadamard(d, np.random.default_rng(1))
+    dense = T.as_dense_matrix(t, d)
+    np.testing.assert_allclose(np.asarray(T.apply(t, x)), np.asarray(x @ dense.T),
+                               rtol=1e-4, atol=1e-5)
+    # orthonormality
+    np.testing.assert_allclose(np.asarray(dense @ dense.T), np.eye(d), atol=1e-4)
+
+
+# --------------------------------------------------------------- CAT math --
+
+def test_cat_optimal_achieves_bound():
+    """A(M̂x, WM̂⁻¹) == A* = Σλ²/(Σλ)² (eq. 9)."""
+    w, x = _layer(3)
+    sw, sx = _sigma_w(w), _sigma(x)
+    m = C.cat_optimal(sw, sx)
+    wt = w @ jnp.linalg.inv(m)
+    st_ = m @ sx @ m.T
+    a = float(S.alignment_from_cov(wt, st_))
+    a_star = float(S.alignment_optimal(w, sx))
+    np.testing.assert_allclose(a, a_star, rtol=1e-3)
+
+
+def test_cat_eq8_identity():
+    """M̂ Σx M̂ = M̂⁻¹ Σw M̂⁻¹ = (Σx^-1/2 Σw Σx^-1/2)^1/2 (eq. 8)."""
+    w, x = _layer(4, d_in=64, d_out=48)
+    sw, sx = _sigma_w(w), _sigma(x)
+    m = C.cat_optimal(sw, sx)
+    minv = jnp.linalg.inv(m)
+    lhs = m @ sx @ m
+    rhs = minv @ sw @ minv
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=2e-2,
+                               atol=2e-2 * float(jnp.max(jnp.abs(lhs))))
+    # The balanced value is G = (Σx^{1/2} Σw Σx^{1/2})^{1/2} conjugated back:
+    # M̂ Σx M̂ = Σx^{-1/2} (Σx^{1/2} Σw Σx^{1/2})^{1/2} Σx^{1/2}-similar form;
+    # we verify via the trace identity Tr(M̂ Σx M̂) = Tr(G) which pins the
+    # eigenvalue content (the paper's printed Σx^{-1/2} form is a typo).
+    xh = C.spd_power(sx, 0.5)
+    g = C.spd_power(xh @ sw @ xh, 0.5)
+    np.testing.assert_allclose(float(jnp.trace(lhs)), float(jnp.trace(g)),
+                               rtol=2e-2)
+
+
+def test_geometric_mean_properties():
+    rng = np.random.default_rng(5)
+    a_ = rng.standard_normal((32, 32))
+    b_ = rng.standard_normal((32, 32))
+    a = jnp.asarray(a_ @ a_.T + 32 * np.eye(32), jnp.float32)
+    b = jnp.asarray(b_ @ b_.T + 32 * np.eye(32), jnp.float32)
+    g1 = C.geometric_mean(a, b)
+    g2 = C.geometric_mean(b, a)  # symmetry
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=5e-3,
+                               atol=5e-3 * float(jnp.max(jnp.abs(g1))))
+    # scalar sanity: aI # bI = sqrt(ab) I
+    g = C.geometric_mean(4.0 * jnp.eye(8), 9.0 * jnp.eye(8))
+    np.testing.assert_allclose(np.asarray(g), 6.0 * np.eye(8), rtol=1e-4)
+
+
+def test_cat_diagonal_matches_cat_optimal_on_diagonal_inputs():
+    rng = np.random.default_rng(6)
+    dw = jnp.asarray(np.diag(rng.uniform(0.5, 4.0, 32)), jnp.float32)
+    dx = jnp.asarray(np.diag(rng.uniform(0.5, 4.0, 32)), jnp.float32)
+    md = C.cat_diagonal(dw, dx)
+    mo = C.cat_optimal(dw, dx)
+    np.testing.assert_allclose(np.asarray(md), np.asarray(mo), rtol=1e-3, atol=1e-4)
+
+
+def test_cat_block_stacked_matches_dense_blockdiag():
+    w, x = _layer(7, d_in=64)
+    sw, sx = _sigma_w(w), _sigma(x)
+    stacked = C.cat_block_stacked(sw, sx, k=16)
+    dense = C.cat_block(sw, sx, k=16)
+    np.testing.assert_allclose(np.asarray(C.blocks_to_dense(stacked)),
+                               np.asarray(dense), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------- paper's ordering claims --
+
+def _joint_sqnr_db(w, x, t):
+    wt = T.fuse_weight(t, w)
+    xt = T.apply(t, x)
+    return float(S.db(S.sqnr_quantized_layer(wt, xt, weight_spec(4, range_p=None),
+                                             act_spec(4))))
+
+
+def test_transform_sqnr_ordering():
+    """CAT(block)+H ≥ Hadamard ≥ none (joint W4A4 SQNR), on outlier-heavy
+    misaligned layers (paper Fig. 6)."""
+    gains_h, gains_cat = [], []
+    for seed in range(4):
+        w, x = _layer(seed)
+        sw, sx = _sigma_w(w), _sigma(x)
+        base = _joint_sqnr_db(w, x, T.Identity())
+        had = _joint_sqnr_db(w, x, T.make_hadamard(x.shape[1],
+                                                   np.random.default_rng(seed)))
+        catb = _joint_sqnr_db(w, x, T.make_cat_block(
+            sw, sx, k=32, hadamard=True, rng=np.random.default_rng(seed)))
+        gains_h.append(had - base)
+        gains_cat.append(catb - had)
+    assert np.mean(gains_h) > 0.0, gains_h       # Hadamard helps concentration
+    assert np.mean(gains_cat) > 0.0, gains_cat   # CAT adds alignment on top
+
+
+def test_cat_improves_alignment_hadamard_does_not():
+    w, x = _layer(9)
+    sw, sx = _sigma_w(w), _sigma(x)
+    a0 = float(S.alignment(w, x))
+    had = T.make_hadamard(x.shape[1], np.random.default_rng(0))
+    a_h = float(S.alignment(T.fuse_weight(had, w), T.apply(had, x)))
+    catb = T.make_cat_block(sw, sx, k=32, hadamard=True,
+                            rng=np.random.default_rng(0))
+    a_c = float(S.alignment(T.fuse_weight(catb, w), T.apply(catb, x)))
+    np.testing.assert_allclose(a_h, a0, rtol=1e-3)   # rotation-invariance
+    assert a_c > a0                                   # CAT improves alignment
+    a_star = float(S.alignment_optimal(w, _sigma(x)))
+    assert a_c <= a_star * (1 + 1e-3)
+
+
+def test_smoothquant_balances_ranges():
+    w, x = _layer(10)
+    t = T.make_smoothquant(jnp.max(jnp.abs(x), 0), jnp.max(jnp.abs(w), 0))
+    xt, wt = T.apply(t, x), T.fuse_weight(t, w)
+    # activation outlier severity reduced
+    ratio0 = float(jnp.max(jnp.abs(x)) / jnp.mean(jnp.abs(x)))
+    ratio1 = float(jnp.max(jnp.abs(xt)) / jnp.mean(jnp.abs(xt)))
+    assert ratio1 < ratio0
+    np.testing.assert_allclose(np.asarray(x @ w.T), np.asarray(xt @ wt.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.sampled_from([1, 8, 16, 32, 64]))
+def test_property_block_cat_function_preserving(seed, k):
+    w, x = _layer(seed, n=256, d_in=64, d_out=32)
+    t = T.make_cat_block(_sigma_w(w), _sigma(x), k=k, hadamard=False)
+    y0 = np.asarray(x @ w.T)
+    y1 = np.asarray(T.apply(t, x) @ T.fuse_weight(t, w).T)
+    np.testing.assert_allclose(y0, y1, rtol=5e-3, atol=5e-3)
+
+
+def test_online_flops_accounting():
+    d = 128
+    t = T.make_cat_block(jnp.eye(d), jnp.eye(d), k=32, hadamard=True)
+    fl = T.online_flops(t, d)
+    assert 0 < fl < 2 * d * d  # cheaper than a full dense transform

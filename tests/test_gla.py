@@ -1,0 +1,102 @@
+"""Chunked GLA vs the sequential recurrence oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import gla
+
+
+def _inputs(seed, b=2, s=67, h=3, dk=8, dv=16):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dv)), jnp.float32)
+    log_w = jnp.asarray(-rng.uniform(1e-4, 1.0, (b, s, h, dk)), jnp.float32)
+    return r, k, v, log_w
+
+
+@pytest.mark.parametrize("chunk", [1, 8, 32, 128])
+def test_chunked_matches_sequential(chunk):
+    r, k, v, log_w = _inputs(0)
+    o_chunk, s_chunk = gla.gla_chunked(r, k, v, log_w, chunk=chunk)
+    o_ref, s_ref = gla.gla_reference(r, k, v, log_w)
+    np.testing.assert_allclose(np.asarray(o_chunk), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_state_carry_across_calls():
+    """prefill(s) then continue == one long call (the decode contract)."""
+    r, k, v, log_w = _inputs(1, s=64)
+    o_full, s_full = gla.gla_chunked(r, k, v, log_w, chunk=16)
+    o1, st = gla.gla_chunked(r[:, :40], k[:, :40], v[:, :40], log_w[:, :40],
+                             chunk=16)
+    o2, s2 = gla.gla_chunked(r[:, 40:], k[:, 40:], v[:, 40:], log_w[:, 40:],
+                             state=st, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_step_matches_chunked():
+    r, k, v, log_w = _inputs(2, s=5)
+    o_ref, _ = gla.gla_chunked(r, k, v, log_w, chunk=32)
+    state = None
+    outs = []
+    import jax
+    state = jnp.zeros((2, 3, 8, 16), jnp.float32)
+    for t in range(5):
+        o, state = gla.gla_decode_step(r[:, t], k[:, t], v[:, t],
+                                       log_w[:, t], state)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(o_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_no_nan_under_extreme_decay():
+    r, k, v, log_w = _inputs(3, s=128)
+    log_w = gla.clamp_log_decay(log_w * 1000.0)  # saturates at LOG_W_MIN
+    o, s = gla.gla_chunked(r, k, v, log_w, chunk=32)
+    assert bool(jnp.all(jnp.isfinite(o))) and bool(jnp.all(jnp.isfinite(s)))
+
+
+def test_ssd_chunked_matches_broadcast_gla():
+    """The factored SSD form == gla_chunked on broadcast r/k + scalar
+    decay (the §Perf B1 rewrite is exact)."""
+    rng = np.random.default_rng(7)
+    b, s, h, dk, dv = 2, 53, 3, 8, 16
+    r = jnp.asarray(rng.standard_normal((b, s, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dv)), jnp.float32)
+    log_w = jnp.asarray(-rng.uniform(1e-4, 1.0, (b, s, h)), jnp.float32)
+    o, st = gla.ssd_chunked(r, k, v, log_w, chunk=16)
+    rb = jnp.broadcast_to(r[:, :, None, :], (b, s, h, dk))
+    kb = jnp.broadcast_to(k[:, :, None, :], (b, s, h, dk))
+    lwb = jnp.broadcast_to(log_w[..., None], (b, s, h, dk))
+    o2, st2 = gla.gla_chunked(rb, kb, v, lwb, chunk=16)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_decode_matches_chunked():
+    rng = np.random.default_rng(8)
+    b, s, h, dk, dv = 2, 6, 3, 8, 16
+    r = jnp.asarray(rng.standard_normal((b, s, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dv)), jnp.float32)
+    log_w = jnp.asarray(-rng.uniform(1e-4, 1.0, (b, s, h)), jnp.float32)
+    o_ref, st_ref = gla.ssd_chunked(r, k, v, log_w, chunk=32)
+    st = jnp.zeros((b, h, dk, dv), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, st = gla.ssd_decode_step(r[:, t], k[:, t], v[:, t], log_w[:, t],
+                                    st)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(o_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,161 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs the
+ref.py pure-jnp oracle (interpret=True executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hadamard import hadamard_factors
+from repro.kernels import ops, ref
+from repro.kernels.block_matmul import block_diag_matmul
+from repro.kernels.dynamic_quant import dynamic_quant
+from repro.kernels.hadamard import hadamard_transform
+from repro.kernels.quant_matmul import quant_matmul
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------- hadamard
+
+@pytest.mark.parametrize("d", [256, 1024, 96, 2304])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("tokens", [1, 17, 256])
+def test_hadamard_kernel_matches_ref(d, dtype, tokens):
+    ha, hb = hadamard_factors(d)
+    ha = jnp.asarray(ha, jnp.float32)
+    hb = jnp.asarray(hb, jnp.float32)
+    x = jnp.asarray(_rng(d + tokens).standard_normal((tokens, d)), dtype)
+    sign = jnp.asarray(_rng(1).choice([-1.0, 1.0], d), jnp.float32)
+    got = hadamard_transform(x, ha, hb, sign, block_tokens=64, interpret=True)
+    want = ref.hadamard_transform(x, ha, hb, sign)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_hadamard_kernel_orthonormal_roundtrip():
+    d = 512
+    ha, hb = map(lambda h: jnp.asarray(h, jnp.float32), hadamard_factors(d))
+    x = jnp.asarray(_rng(3).standard_normal((8, d)), jnp.float32)
+    y = hadamard_transform(x, ha, hb, interpret=True)
+    # H orthonormal: ||y|| == ||x|| and H(Hx) with Hᵀ=H for symmetric factors
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+# ------------------------------------------------------------ dynamic quant
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("symmetric", [True, False])
+@pytest.mark.parametrize("shape", [(5, 64), (128, 384), (2, 3, 96)])
+def test_dynamic_quant_matches_ref(bits, symmetric, shape):
+    x = jnp.asarray(_rng(bits + shape[0]).standard_normal(shape) * 3, jnp.float32)
+    q, s, z = dynamic_quant(x, bits=bits, symmetric=symmetric,
+                            block_tokens=32, interpret=True)
+    qr, sr, zr = ref.dynamic_quant(x, bits=bits, symmetric=symmetric)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_dynamic_quant_reconstruction_error(bits):
+    x = jnp.asarray(_rng(9).standard_normal((64, 128)), jnp.float32)
+    q, s, z = dynamic_quant(x, bits=bits, interpret=True)
+    recon = (q.astype(jnp.float32) - z) * s
+    step = np.asarray(s)
+    assert float(jnp.max(jnp.abs(recon - x))) <= step.max() * 1.01
+
+
+# -------------------------------------------------------------- quant matmul
+
+@pytest.mark.parametrize("mnk", [(8, 16, 32), (100, 96, 64), (256, 384, 512),
+                                 (33, 65, 129)])
+def test_quant_matmul_matches_ref(mnk):
+    m, n, k = mnk
+    r = _rng(m * n)
+    qx = jnp.asarray(r.integers(-8, 8, (m, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-8, 8, (k, n)), jnp.int8)
+    sx = jnp.asarray(r.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    zpx = jnp.asarray(r.integers(-8, 8, (m, 1)), jnp.float32)
+    sw = jnp.asarray(r.uniform(0.01, 0.1, (1, n)), jnp.float32)
+    got = quant_matmul(qx, sx, zpx, qw, sw, block_m=32, block_n=32,
+                       block_k=32, interpret=True)
+    want = ref.quant_matmul(qx, sx, zpx, qw, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_equals_dequant_matmul():
+    """int math identity: kernel == dequantize-then-fp-matmul."""
+    r = _rng(5)
+    m, k, n = 24, 48, 36
+    qx = jnp.asarray(r.integers(-8, 8, (m, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-8, 8, (k, n)), jnp.int8)
+    sx = jnp.asarray(r.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    zpx = jnp.asarray(r.integers(-8, 8, (m, 1)), jnp.float32)
+    sw = jnp.asarray(r.uniform(0.01, 0.1, (1, n)), jnp.float32)
+    x_fp = (qx.astype(jnp.float32) - zpx) * sx
+    w_fp = qw.astype(jnp.float32) * sw
+    want = x_fp @ w_fp
+    got = quant_matmul(qx, sx, zpx, qw, sw, block_m=8, block_n=16, block_k=16,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+# --------------------------------------------------------- block-diag matmul
+
+@pytest.mark.parametrize("nk", [(4, 32), (8, 128), (3, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_diag_matmul_matches_ref(nk, dtype):
+    n, k = nk
+    r = _rng(n * k)
+    x = jnp.asarray(r.standard_normal((37, n * k)), dtype)
+    blocks = jnp.asarray(r.standard_normal((n, k, k)) / np.sqrt(k), jnp.float32)
+    got = block_diag_matmul(x, blocks, block_tokens=16, interpret=True)
+    want = ref.block_diag_matmul(x, blocks)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_block_diag_matches_dense_blockdiag():
+    import jax.scipy.linalg as jsl
+    r = _rng(11)
+    n, k = 4, 16
+    x = jnp.asarray(r.standard_normal((9, n * k)), jnp.float32)
+    blocks = jnp.asarray(r.standard_normal((n, k, k)), jnp.float32)
+    dense = jsl.block_diag(*[blocks[i] for i in range(n)])
+    want = x @ dense.T
+    got = block_diag_matmul(x, blocks, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ----------------------------------------------------- fused serving path --
+
+def test_cat_transform_matmul_end_to_end():
+    """Kernel composition == oracle composition (the paper's serving layer)."""
+    r = _rng(21)
+    d, d_out, toks, k = 256, 192, 50, 64
+    n = d // k
+    ha, hb = map(lambda h: jnp.asarray(h, jnp.float32), hadamard_factors(d))
+    sign = jnp.asarray(r.choice([-1.0, 1.0], d), jnp.float32)
+    x = jnp.asarray(r.standard_normal((toks, d)), jnp.float32)
+    blocks = jnp.asarray(r.standard_normal((n, k, k)) / np.sqrt(k), jnp.float32)
+    qw = jnp.asarray(r.integers(-8, 8, (d, d_out)), jnp.int8)
+    sw = jnp.asarray(r.uniform(0.01, 0.05, (1, d_out)), jnp.float32)
+
+    got = ops.cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
+                                   act_bits=4, interpret=True)
+
+    xt = ref.block_diag_matmul(x, blocks)
+    xt = ref.hadamard_transform(xt, ha, hb, sign)
+    qx, sx, zx = ref.dynamic_quant(xt, bits=4, symmetric=False)
+    want = ref.quant_matmul(qx, sx, zx, qw, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
