@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timer
 from repro.core.hadamard import hadamard_factors
+from repro.core.quantizers import pack_int4
 from repro.kernels import ops, ref
 
 
@@ -44,8 +45,23 @@ def main() -> None:
     sw = jnp.asarray(rng.uniform(0.01, 0.1, (1, d_out)), jnp.float32)
     f = jax.jit(lambda *a: ref.quant_matmul(*a))
     us, _ = timer(f, qx, sx, zx, qw, sw, warmup=2, iters=10)
+    w8_bytes = qw.size * qw.dtype.itemsize
     emit("kernel_qmatmul_ref_jnp", us,
-         f"gflops={2*toks*d*d_out/us/1e3:.2f}")
+         f"weight_bytes={w8_bytes} gflops={2*toks*d*d_out/us/1e3:.2f}")
+
+    # --- int4-packed weight path: same layer (qw is already int4-range),
+    # half the weight bytes vs the int8 baseline above
+    qwp = pack_int4(qw, axis=0)
+    w4_bytes = qwp.size * qwp.dtype.itemsize
+    us4, _ = timer(jax.jit(lambda *a: ref.quant_matmul_w4(*a)),
+                   qx, sx, zx, qwp, sw, warmup=2, iters=10)
+    emit("kernel_qmatmul_w4_ref_jnp", us4,
+         f"weight_bytes={w4_bytes} ratio={w4_bytes/w8_bytes:.2f} "
+         f"gflops={2*toks*d*d_out/us4/1e3:.2f}")
+    us4p, _ = timer(lambda *a: ops.qmatmul_w4(*a, interpret=True),
+                    qx, sx, zx, qwp, sw, warmup=1, iters=2)
+    emit("kernel_qmatmul_w4_pallas_interpret", us4p,
+         "correctness-path (TPU perf from roofline: half HBM weight traffic)")
 
     blocks = jnp.asarray(rng.standard_normal((d // 64, 64, 64)) / 8,
                          jnp.float32)

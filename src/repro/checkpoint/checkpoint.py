@@ -26,13 +26,17 @@ _SEP = "/"
 _NATIVE_KINDS = set("fiub?c")
 
 
+def _path_key(path) -> str:
+    """Flat manifest key for a tree_map_with_path entry path."""
+    return _SEP.join(str(getattr(e, "key", getattr(e, "idx", e)))
+                     for e in path)
+
+
 def _flatten(tree) -> dict:
     flat = {}
 
     def walk(path, leaf):
-        key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", e)))
-                        for e in path)
-        flat[key] = np.asarray(leaf)
+        flat[_path_key(path)] = np.asarray(leaf)
         return leaf
 
     jax.tree_util.tree_map_with_path(walk, tree)
@@ -54,6 +58,14 @@ def _decode(raw: np.ndarray, dtype: str, shape) -> np.ndarray:
     return raw.view(want).reshape(shape)
 
 
+def _packed_int4_layers(tree) -> list:
+    """Flat keys of int4-packed QLinear leaves (their qweight buffers are
+    nibble-packed int8 — consumers must unpack along the input dim)."""
+    from repro.core.qlinear import iter_qlinear
+    return [_path_key(path) for path, leaf in iter_qlinear(tree)
+            if leaf.packed]
+
+
 def save(ckpt_dir: str, step: int, params, opt_state=None,
          meta: Optional[dict] = None) -> str:
     """Atomic save (write to tmp, rename)."""
@@ -62,7 +74,12 @@ def save(ckpt_dir: str, step: int, params, opt_state=None,
     groups = {"params": params}
     if opt_state is not None:
         groups["opt_state"] = opt_state
-    manifest: dict[str, Any] = {"step": step, "meta": meta or {},
+    meta = dict(meta or {})
+    packed = _packed_int4_layers(params)
+    meta["packed_int4"] = bool(packed)
+    if packed:
+        meta["packed_int4_layers"] = packed
+    manifest: dict[str, Any] = {"step": step, "meta": meta,
                                 "groups": {}}
     for gname, tree in groups.items():
         flat = _flatten(tree)
@@ -104,9 +121,7 @@ def restore(ckpt_dir: str, step: Optional[int], like_params,
         leaves_paths = []
 
         def collect(path, leaf):
-            key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", e)))
-                            for e in path)
-            leaves_paths.append(key)
+            leaves_paths.append(_path_key(path))
             return leaf
 
         jax.tree_util.tree_map_with_path(collect, like)

@@ -22,7 +22,7 @@ from .calibration import Taps, calibrate
 from .cat import cat_block_stacked
 from .gptq import gptq_quantize, rtn_quantize
 from .qlinear import QLinear, fuse_weight_in
-from .quantizers import weight_spec
+from .quantizers import pack_int4, weight_spec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +83,9 @@ class QuantizeConfig:
     smooth_alpha: float = 0.5
     range_p: Optional[float] = 2.4
     seed: int = 0
+    # w_bits=4 stores weight codes nibble-packed (two int4 per int8 byte,
+    # halving weight memory) unless disabled.
+    pack_int4: bool = True
 
 
 def _sigma_w_of(ws: List[np.ndarray]) -> np.ndarray:
@@ -124,6 +127,16 @@ def build_transform(qcfg: QuantizeConfig, cfg, stats, ws: List[np.ndarray],
         return T.make_cat_block(sw, sx, k=min(k, d),
                                 hadamard=(kind == "cat"), rng=rng)
     raise ValueError(kind)
+
+
+def _make_qlinear(codes: jnp.ndarray, scale: jnp.ndarray, t,
+                  qcfg: QuantizeConfig) -> QLinear:
+    """Wrap quantized codes; at w_bits=4 pack two nibbles per int8 byte."""
+    if qcfg.w_bits == 4 and qcfg.pack_int4:
+        d_in = codes.shape[-2]
+        return QLinear(pack_int4(codes, axis=-2), scale, t,
+                       act_bits=qcfg.a_bits, w_bits=4, d_in=d_in)
+    return QLinear(codes, scale, t, act_bits=qcfg.a_bits, w_bits=qcfg.w_bits)
 
 
 def _quantize_weight(v: jnp.ndarray, sigma_t: Optional[jnp.ndarray],
@@ -168,7 +181,7 @@ def quantize_model(model, params, qcfg: QuantizeConfig,
             else:
                 vf = fuse_weight_in(t, v)
             codes, scale = _quantize_weight(vf, sigma_t, qcfg)
-            out[name] = QLinear(codes, scale, t, act_bits=qcfg.a_bits)
+            out[name] = _make_qlinear(codes, scale, t, qcfg)
         return out
 
     # --- layer-stacked groups
@@ -196,7 +209,7 @@ def quantize_model(model, params, qcfg: QuantizeConfig,
         for name, w_np in zip(group.weights, ws):
             vf = fuse_weight_in(t, jnp.asarray(w_np, jnp.float32))
             codes, scale = _quantize_weight(vf, sigma_t, qcfg)
-            scope[name] = QLinear(codes, scale, t, act_bits=qcfg.a_bits)
+            scope[name] = _make_qlinear(codes, scale, t, qcfg)
 
     # encoder layers (whisper): same groups, enc scope
     if cfg.family == "encdec":

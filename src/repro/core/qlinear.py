@@ -20,20 +20,51 @@ import jax
 import jax.numpy as jnp
 
 from . import transforms as T
-from .quantizers import QuantSpec, act_spec, fake_quant
+from .quantizers import QuantSpec, act_spec, fake_quant, unpack_int4
 
 
 @dataclasses.dataclass(frozen=True)
 class QLinear:
-    qweight: jnp.ndarray          # int8 codes, (d_in, d_out) [or stacked (L, ...)]
+    qweight: jnp.ndarray          # int8 codes, (d_in, d_out) [or stacked (L, ...)];
+                                  # int4-packed: (ceil(d_in/2), d_out), two nibbles/byte
     scale: jnp.ndarray            # f32, (1, d_out)
     transform: Any                # transform pytree acting on the input dim
     act_bits: int = 4             # static: dynamic per-token act quant bits (0 = off)
+    w_bits: int = 8               # bit width of the stored weight codes
+    d_in: int = 0                 # unpacked input dim when int4-packed; 0 = unpacked
+
+    @property
+    def packed(self) -> bool:
+        return self.d_in > 0
 
 
 jax.tree_util.register_dataclass(
-    QLinear, data_fields=["qweight", "scale", "transform"], meta_fields=["act_bits"]
+    QLinear, data_fields=["qweight", "scale", "transform"],
+    meta_fields=["act_bits", "w_bits", "d_in"]
 )
+
+
+def unpacked_qweight(p: QLinear) -> jnp.ndarray:
+    """The int8 code tensor (..., d_in, d_out), unpacking int4 storage."""
+    if p.packed:
+        return unpack_int4(p.qweight, p.d_in, axis=-2)
+    return p.qweight
+
+
+def iter_qlinear(tree) -> list:
+    """(path, QLinear) pairs for every QLinear leaf of a params pytree —
+    the one tree walk shared by serving memory reports and checkpoint
+    manifest flags."""
+    out = []
+
+    def walk(path, leaf):
+        if isinstance(leaf, QLinear):
+            out.append((path, leaf))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        walk, tree, is_leaf=lambda x: isinstance(x, QLinear))
+    return out
 
 
 def fuse_weight_in(t, v: jnp.ndarray) -> jnp.ndarray:
@@ -49,7 +80,7 @@ def dense(p, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
         x = T.apply(p.transform, x)
         if p.act_bits:
             x = fake_quant(x, act_spec(p.act_bits))
-        w = p.qweight.astype(cd) * p.scale.astype(cd)
+        w = unpacked_qweight(p).astype(cd) * p.scale.astype(cd)
         return x.astype(cd) @ w
     cd = compute_dtype or x.dtype
     return x @ p.astype(cd)
@@ -58,7 +89,7 @@ def dense(p, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
 def dense_params(p) -> jnp.ndarray:
     """Materialize the effective fp weight of either param kind (analysis)."""
     if isinstance(p, QLinear):
-        return p.qweight.astype(jnp.float32) * p.scale
+        return unpacked_qweight(p).astype(jnp.float32) * p.scale
     return jnp.asarray(p, jnp.float32)
 
 

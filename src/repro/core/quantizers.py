@@ -129,6 +129,49 @@ def fake_quant(x: jnp.ndarray, spec: QuantSpec, scale=None, zp=None) -> jnp.ndar
     return dequantize(q, scale, zp, x.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Int4 packing (two nibbles per int8 byte, serving storage format)
+# ---------------------------------------------------------------------------
+#
+# Layout: codes are packed pairwise along `axis` (default -2, the input/K
+# dim of an input-major weight V (d_in, d_out)). Even index -> low nibble,
+# odd index -> high nibble:  byte[i] = (q[2i] & 0xF) | (q[2i+1] << 4).
+# Odd-sized axes are zero-padded before packing (code 0 dequantizes to 0,
+# so padded rows are inert in any contraction).
+
+def pack_int4(q: jnp.ndarray, axis: int = -2) -> jnp.ndarray:
+    """Pack int4-range codes (int8 storage, values in [-8, 7]) two per byte
+    along `axis`. Output size along `axis` is ceil(n/2)."""
+    q = jnp.asarray(q)
+    axis = axis % q.ndim
+    if q.shape[axis] % 2:
+        pad = [(0, 0)] * q.ndim
+        pad[axis] = (0, 1)
+        q = jnp.pad(q, pad)
+    lo = jax.lax.slice_in_dim(q, 0, None, stride=2, axis=axis).astype(jnp.int32)
+    hi = jax.lax.slice_in_dim(q, 1, None, stride=2, axis=axis).astype(jnp.int32)
+    return ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray, n: Optional[int] = None,
+                axis: int = -2) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`: -> int8 codes in [-8, 7], sized `n`
+    along `axis` (pass the original size to strip odd-size padding)."""
+    p = jnp.asarray(packed).astype(jnp.int32)
+    axis = axis % p.ndim
+    # ((v & 0xF) ^ 8) - 8 sign-extends a nibble without relying on
+    # arithmetic-shift semantics (portable across interpret/Mosaic).
+    lo = ((p & 0xF) ^ 8) - 8
+    hi = (((p >> 4) & 0xF) ^ 8) - 8
+    q = jnp.stack([lo, hi], axis=axis + 1)  # (..., n//2, 2, ...)
+    shape = list(p.shape)
+    shape[axis] *= 2
+    q = q.reshape(shape).astype(jnp.int8)
+    if n is not None:
+        q = jax.lax.slice_in_dim(q, 0, n, axis=axis)
+    return q
+
+
 def quant_range(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
     """r(x) from the paper: the full quantized interval size.
 

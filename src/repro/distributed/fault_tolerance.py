@@ -133,7 +133,7 @@ def surviving_mesh(n_lost: int = 0, axis_names=("data", "model"),
     while size % model:
         model //= 2
     data = size // model
-    mesh = jax.make_mesh((data, model), axis_names,
-                         devices=devs[:data * model],
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from .compat import make_mesh
+    mesh = make_mesh((data, model), axis_names,
+                     devices=devs[:data * model])
     return mesh, (data, model)

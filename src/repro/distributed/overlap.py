@@ -29,7 +29,8 @@ def ring_matmul(x_shard: jnp.ndarray, w_shard: jnp.ndarray,
                 axis_name: str, gather: bool = False) -> jnp.ndarray:
     """x_shard (m, k/G), w_shard (k/G, n); m divisible by G.
     Returns y rows chunk `idx` (m/G, n), or full (m, n) with gather."""
-    g = jax.lax.axis_size(axis_name)
+    from .compat import axis_size
+    g = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     m = x_shard.shape[0]
     assert m % g == 0, (m, g)

@@ -18,8 +18,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .compat import shard_map
 
 
 def pipeline_apply(stage_fn: Callable, mesh: Mesh, axis: str,

@@ -16,6 +16,7 @@ from .block_matmul import block_diag_matmul
 from .dynamic_quant import dynamic_quant
 from .hadamard import hadamard_transform
 from .quant_matmul import quant_matmul
+from .quant_matmul_w4 import quant_matmul_w4
 
 
 def default_interpret() -> bool:
@@ -37,17 +38,24 @@ def qmatmul(qx, sx, zpx, qw, sw, **kw):
     return quant_matmul(qx, sx, zpx, qw, sw, **kw)
 
 
+def qmatmul_w4(qx, sx, zpx, qw_packed, sw, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return quant_matmul_w4(qx, sx, zpx, qw_packed, sw, **kw)
+
+
 def block_matmul(x, blocks, **kw):
     kw.setdefault("interpret", default_interpret())
     return block_diag_matmul(x, blocks, **kw)
 
 
 def cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
-                         act_bits: int = 4, **kw):
+                         act_bits: int = 4, packed_int4: bool = False, **kw):
     """The paper's deployed quantized linear layer, end to end:
     y ≈ W·T⁻¹·Q(T x) with T = H·M̂_block, weights pre-fused & pre-quantized.
 
-    x (..., d) fp; blocks (n,k,k); qw (d, d_out) int8; sw (1, d_out) f32.
+    x (..., d) fp; blocks (n,k,k); qw (d, d_out) int8 — or, with
+    ``packed_int4``, (ceil(d/2), d_out) nibble-packed int4 codes;
+    sw (1, d_out) f32.
     """
     lead = x.shape[:-1]
     d = x.shape[-1]
@@ -55,5 +63,8 @@ def cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
     xf = block_matmul(xf, blocks, **kw)
     xf = hadamard(xf, ha, hb, sign, **kw)
     qx, sx, zpx = dyn_quant(xf, bits=act_bits, symmetric=False, **kw)
-    y = qmatmul(qx, sx, zpx, qw, sw, **kw)
+    if packed_int4:
+        y = qmatmul_w4(qx, sx, zpx, qw, sw, **kw)
+    else:
+        y = qmatmul(qx, sx, zpx, qw, sw, **kw)
     return y.reshape(*lead, qw.shape[1]).astype(x.dtype)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: int4-packed-weight quantized matmul (W4A8).
+
+Weights arrive packed two nibbles per int8 byte along K (see
+``repro.core.quantizers.pack_int4``: even K index -> low nibble, odd ->
+high). The kernel unpacks in VMEM right before the contraction, so HBM->
+VMEM weight traffic is halved vs the int8 kernel while the MXU still sees
+an int8 contraction:
+
+    y[m,n] = sx[m]·sw[n]·( Σ_k qx[m,k]·qw[k,n] − zpx[m]·Σ_k qw[k,n] )
+
+Output accumulation across the K grid dimension reuses the revisited-output
+pattern from ``quant_matmul.py`` (out block index ignores k; init at k=0);
+the zero-point correction likewise uses the per-tile column sum of the
+*unpacked* qw, which is linear in k.
+
+Grid: (M/TM, N/TN, K/TK). Per step the packed weight block is (TK//2, TN)
+int8 — half the bytes of the int8 kernel's (TK, TN). Nibble sign-extension
+uses ((v & 0xF) ^ 8) - 8, which is portable across interpret and Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_block(pw: jnp.ndarray) -> jnp.ndarray:
+    """(TK//2, TN) packed int8 -> (TK, TN) int32 codes in [-8, 7]."""
+    p = pw.astype(jnp.int32)
+    lo = ((p & 0xF) ^ 8) - 8
+    hi = (((p >> 4) & 0xF) ^ 8) - 8
+    tk2, tn = p.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * tk2, tn)
+
+
+def _qmm_w4_kernel(x_ref, sx_ref, zx_ref, w_ref, sw_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qx = x_ref[...].astype(jnp.int32)
+    qw = _unpack_block(w_ref[...])
+    acc = jnp.dot(qx, qw, preferred_element_type=jnp.int32).astype(jnp.float32)
+    colsum = jnp.sum(qw, axis=0, keepdims=True).astype(jnp.float32)
+    sx = sx_ref[...]
+    zx = zx_ref[...]
+    sw = sw_ref[...]
+    o_ref[...] += (sx * sw * (acc - zx * colsum)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "out_dtype", "interpret"))
+def quant_matmul_w4(qx: jnp.ndarray, sx: jnp.ndarray, zpx: jnp.ndarray,
+                    qw_packed: jnp.ndarray, sw: jnp.ndarray,
+                    block_m: int = 256, block_n: int = 256,
+                    block_k: int = 512,
+                    out_dtype=jnp.float32, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """qx (M,K) int8 activation codes, sx/zpx (M,1) f32, qw_packed
+    (ceil(K/2), N) int8 nibble-packed weight codes, sw (1,N) f32 -> (M,N).
+
+    Odd K is allowed: the packed weight's final byte carries a zero high
+    nibble and qx's K axis is zero-padded to match — both inert.
+    """
+    m, k = qx.shape
+    k2, n = qw_packed.shape
+    assert k2 == (k + 1) // 2, (qx.shape, qw_packed.shape)
+    if k % 2:  # align qx's K with the padded nibble
+        qx = jnp.pad(qx, ((0, 0), (0, 1)))
+        k += 1
+    # block_k counts UNPACKED K rows and must stay even so each packed
+    # byte lands wholly inside one grid step.
+    tm, tn = min(block_m, m), min(block_n, n)
+    tk = min(block_k, k)
+    tk += tk % 2
+    pm, pn, pk = (-m) % tm, (-n) % tn, (-k) % tk
+    if pm or pk:
+        qx = jnp.pad(qx, ((0, pm), (0, pk)))
+        sx = jnp.pad(sx, ((0, pm), (0, 0)), constant_values=1.0)
+        zpx = jnp.pad(zpx, ((0, pm), (0, 0)))
+    if pk or pn:
+        qw_packed = jnp.pad(qw_packed, ((0, pk // 2), (0, pn)))
+        sw = jnp.pad(sw, ((0, 0), (0, pn)), constant_values=1.0)
+    gm, gn, gk = qx.shape[0] // tm, qw_packed.shape[1] // tn, qx.shape[1] // tk
+    out = pl.pallas_call(
+        _qmm_w4_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((tk // 2, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qx.shape[0], qw_packed.shape[1]),
+                                       out_dtype),
+        interpret=interpret,
+    )(qx, sx, zpx, qw_packed, sw)
+    return out[:m, :n]

@@ -62,6 +62,29 @@ def quant_matmul(qx: jnp.ndarray, sx: jnp.ndarray, zpx: jnp.ndarray,
     return y.astype(out_dtype)
 
 
+def unpack_int4(packed: jnp.ndarray, k: int | None = None) -> jnp.ndarray:
+    """(K//2, N) nibble-packed int8 -> (K, N) int8 codes in [-8, 7].
+
+    Delegates to the canonical layout in repro.core.quantizers so the
+    storage contract lives in exactly one place (the kernel's in-VMEM
+    _unpack_block is validated against this oracle by the tests).
+    """
+    from repro.core.quantizers import unpack_int4 as _unpack
+    return _unpack(packed, k, axis=0)
+
+
+def quant_matmul_w4(qx: jnp.ndarray, sx: jnp.ndarray, zpx: jnp.ndarray,
+                    qw_packed: jnp.ndarray, sw: jnp.ndarray,
+                    out_dtype=jnp.float32) -> jnp.ndarray:
+    """W4A8 oracle: unpack the int4 weight codes, then int8 quant_matmul.
+
+    qx: (M, K) int8, sx/zpx: (M, 1) f32, qw_packed: (ceil(K/2), N) int8,
+    sw: (1, N) f32.
+    """
+    qw = unpack_int4(qw_packed, qx.shape[1])
+    return quant_matmul(qx, sx, zpx, qw, sw, out_dtype=out_dtype)
+
+
 def block_diag_matmul(x: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
     """y = x @ Tᵀ for block-diagonal T = Diag(B_1..B_n); blocks (n, k, k).
     y[..., i, a] = Σ_b blocks[i, a, b] · x[..., i, b]."""

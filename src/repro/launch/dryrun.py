@@ -24,6 +24,7 @@ import traceback  # noqa: E402
 import jax  # noqa: E402
 
 from repro.distributed.act_sharding import active_mesh  # noqa: E402
+from repro.distributed.compat import set_mesh  # noqa: E402
 from repro.launch.hlo_analysis import collective_bytes, cost_summary  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import (ARCHS, SHAPES, build_cell,  # noqa: E402
@@ -41,7 +42,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *, n_layers=None,
                       act_shard=act_shard, remat=remat, kv_bits=kv_bits,
                       quantized_serve=quantized)
     cost_ctx = exact_cost_mode() if exact_cost else contextlib.nullcontext()
-    with jax.set_mesh(mesh), active_mesh(mesh), cost_ctx:
+    with set_mesh(mesh), active_mesh(mesh), cost_ctx:
         jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
                          donate_argnums=cell.donate)
         lowered = jitted.lower(*cell.args_sds)

@@ -13,6 +13,8 @@ import math
 
 import jax
 
+from repro.distributed import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -22,11 +24,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     assert len(devs) >= n, (
         f"need {n} devices for mesh {shape}; have {len(devs)} — run under "
         "launch/dryrun.py (it forces 512 host devices) or a real cluster")
-    return jax.make_mesh(shape, axes, devices=devs[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, devices=devs[:n])
 
 
 def make_mesh(shape, axes):
     n = math.prod(shape)
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -19,8 +19,20 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.pipeline import QuantizeConfig, quantize_model
+from repro.core.qlinear import iter_qlinear, num_weight_bytes
 from repro.data import calibration_batches, make_batch
 from repro.models import build
+
+
+def weight_memory_report(params) -> dict:
+    """Quantized-weight storage accounting: total bytes and whether any
+    layer serves from int4-packed buffers."""
+    leaves = [l for _, l in iter_qlinear(params)]
+    return {
+        "qlinear_layers": len(leaves),
+        "weight_bytes": int(sum(num_weight_bytes(l) for l in leaves)),
+        "packed_int4": any(l.packed for l in leaves),
+    }
 
 
 def greedy_generate(model, params, prompts: jnp.ndarray, gen: int,
@@ -57,12 +69,14 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(seed))
 
+    mem = {}
     if transform != "fp":
         qcfg = QuantizeConfig(w_bits=w_bits, a_bits=a_bits,
                               transform=transform,
                               cat_block=min(cfg.cat_block, 32))
         calib = calibration_batches(cfg, n_seqs=8, seq_len=64, batch=4)
         params = quantize_model(model, params, qcfg, calib)
+        mem = weight_memory_report(params)
 
     prompts = jnp.asarray(
         make_batch(cfg, prompt_len, batch, seed=seed)["tokens"])
@@ -77,6 +91,7 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
         "tokens": np.asarray(tokens),
         "wall_s": wall,
         "tok_per_s": batch * gen / wall,
+        **mem,
     }
 
 
@@ -88,8 +103,10 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--transform", default="cat",
                     choices=["fp", "none", "smoothquant", "hadamard", "cat"])
-    ap.add_argument("--w-bits", type=int, default=4)
-    ap.add_argument("--a-bits", type=int, default=4)
+    ap.add_argument("--w-bits", "--bits-w", dest="w_bits", type=int,
+                    default=4)
+    ap.add_argument("--a-bits", "--bits-a", dest="a_bits", type=int,
+                    default=4)
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
     out = serve_benchmark(arch=args.arch, batch=args.batch,
@@ -98,6 +115,10 @@ def main() -> None:
                           a_bits=args.a_bits, smoke=not args.full_config)
     print(f"{out['arch']} [{out['transform']}]: "
           f"{out['tok_per_s']:.1f} tok/s ({out['wall_s']:.2f}s wall)")
+    if out.get("qlinear_layers"):
+        kind = "int4-packed" if out["packed_int4"] else "int8"
+        print(f"  weights: {out['weight_bytes'] / 2**20:.2f} MiB across "
+              f"{out['qlinear_layers']} quantized linears ({kind})")
 
 
 if __name__ == "__main__":

@@ -7,10 +7,11 @@ Shapes (per assignment):
   decode_32k   ctx 32768,  global_batch 128   (serve: one decode step)
   long_500k    ctx 524288, global_batch 1     (decode; sub-quadratic only)
 
-Serve cells lower the QUANTIZED deployment: int8 weights + online CAT
-transforms + dynamic act quant + int8 KV cache (the paper's W4A4+KV
-setup, W4 stored in int8 range). Train cells lower bf16 params + f32
-ZeRO-sharded AdamW-master state, remat + Megatron-SP activations.
+Serve cells lower the QUANTIZED deployment: int4-packed weight codes
+(two nibbles per int8 byte along d_in — half the int8 buffer bytes) +
+online CAT transforms + dynamic act quant + int8 KV cache (the paper's
+W4A4+KV setup). Train cells lower bf16 params + f32 ZeRO-sharded
+AdamW-master state, remat + Megatron-SP activations.
 """
 from __future__ import annotations
 
@@ -124,11 +125,12 @@ def _quantized_abstract(cfg, shapes):
     def q_leaf(leaf, stack):
         d_in, d_out = leaf.shape[-2], leaf.shape[-1]
         lead = leaf.shape[:-2]
+        # W4 serving default: nibble-packed codes (two int4 per int8 byte)
         return QLinear(
-            _sds(leaf.shape, jnp.int8),
+            _sds(lead + ((d_in + 1) // 2, d_out), jnp.int8),
             _sds(lead + (1, d_out), jnp.float32),
             _abstract_transform(d_in, cfg.cat_block, stack),
-            act_bits=4)
+            act_bits=4, w_bits=4, d_in=d_in)
 
     def convert(scope_name, groups, stacked: bool):
         scope = out.get(scope_name)

@@ -147,6 +147,6 @@ def _expert_dense(p, xe):
         if p.act_bits:
             from repro.core.quantizers import act_spec, fake_quant
             x = fake_quant(x, act_spec(p.act_bits))
-        w = p.qweight.astype(xe.dtype) * p.scale.astype(xe.dtype)
+        w = qlinear.unpacked_qweight(p).astype(xe.dtype) * p.scale.astype(xe.dtype)
         return jnp.einsum("gecd,edf->gecf", x.astype(xe.dtype), w)
     return jnp.einsum("gecd,edf->gecf", xe, p.astype(xe.dtype))

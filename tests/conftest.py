@@ -1,0 +1,72 @@
+"""Shared fixtures + markers for the tier-1 suite.
+
+Expensive shared objects (tiny model + params, calibration batches,
+transforms) are built once per session. The ``slow`` marker gates the
+>30s end-to-end cases so ``pytest -m "not slow"`` stays fast:
+
+    PYTHONPATH=src python -m pytest -q -m "not slow"   # ~1 min on CPU
+    PYTHONPATH=src python -m pytest -q                 # everything
+"""
+import jax
+import numpy as np
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: >30s end-to-end case (deselect with -m 'not slow')")
+
+
+# ------------------------------------------------------------ tiny model --
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    from repro.configs import get_config
+    return get_config("catlm_60m").smoke()
+
+
+@pytest.fixture(scope="session")
+def tiny_model(tiny_cfg):
+    from repro.models import build
+    return build(tiny_cfg)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_model):
+    return tiny_model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def tiny_calib(tiny_cfg):
+    from repro.data import calibration_batches
+    return list(calibration_batches(tiny_cfg, n_seqs=4, seq_len=32, batch=2))
+
+
+@pytest.fixture(scope="session")
+def tiny_quantized(tiny_model, tiny_params, tiny_calib):
+    """W4A4 CAT-quantized params with int4-packed weights (the serving
+    default) — shared by checkpoint/serving/packing tests."""
+    from repro.core.pipeline import QuantizeConfig, quantize_model
+    qcfg = QuantizeConfig(w_bits=4, a_bits=4, transform="cat", cat_block=16)
+    return quantize_model(tiny_model, tiny_params, qcfg, tiny_calib)
+
+
+# ------------------------------------------------------------ transforms --
+
+@pytest.fixture(scope="session")
+def hadamard_transform_128():
+    from repro.core import transforms as T
+    return T.make_hadamard(128, np.random.default_rng(0))
+
+
+@pytest.fixture(scope="session")
+def cat_transform_128():
+    """Block-CAT (k=32, +Hadamard) for a correlated 128-d layer."""
+    from repro.core import transforms as T
+    rng = np.random.default_rng(1)
+    mix = rng.standard_normal((128, 128)) / np.sqrt(128)
+    x = rng.standard_normal((2048, 128)) @ mix
+    w = rng.standard_normal((96, 128)) / np.sqrt(128)
+    sx = jax.numpy.asarray(x.T @ x / x.shape[0], jax.numpy.float32)
+    sw = jax.numpy.asarray(w.T @ w, jax.numpy.float32)
+    return T.make_cat_block(sw, sx, k=32, hadamard=True, rng=rng)

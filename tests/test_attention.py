@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.models.layers import chunked_attention, quantize_kv, softcap
 
@@ -94,6 +94,18 @@ def test_int8_kv_tuple_path():
        skv=st.integers(8, 40))
 def test_property_chunking_invariance(seed, chunk, skv):
     """Output is invariant to chunk size (incl. non-divisible chunks)."""
+    _check_chunking_invariance(seed, chunk, skv)
+
+
+# Deterministic port of the property above — runs without hypothesis.
+@pytest.mark.parametrize("seed,chunk,skv",
+                         [(0, 3, 8), (1, 5, 23), (2, 16, 40), (3, 5, 15),
+                          (4, 3, 33)])
+def test_chunking_invariance_seeded(seed, chunk, skv):
+    _check_chunking_invariance(seed, chunk, skv)
+
+
+def _check_chunking_invariance(seed, chunk, skv):
     q, k, v = _mk(seed, sq=8, skv=skv)
     qp = jnp.broadcast_to(jnp.arange(8) + (skv - 8), (2, 8))
     a = chunked_attention(q, k, v, q_positions=qp, kv_chunk=chunk)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import quantizers as Q
 
@@ -61,13 +61,7 @@ def test_int_codes_in_range():
     assert int(q.min()) >= spec.qmin and int(q.max()) <= spec.qmax
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    bits=st.integers(2, 8),
-    symmetric=st.booleans(),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_property_quant_error_bounded_by_half_step(bits, symmetric, seed):
+def _check_error_bounded_by_half_step(bits, symmetric, seed):
     """|x - Q(x)| <= scale/2 for in-range values (uniform quantizer invariant)."""
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.standard_normal(256) * rng.uniform(0.1, 10), jnp.float32)
@@ -80,9 +74,25 @@ def test_property_quant_error_bounded_by_half_step(bits, symmetric, seed):
     assert float(jnp.max(jnp.abs(out - x))) <= bound
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(3, 8))
-def test_property_more_bits_less_error(seed, bits):
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    symmetric=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_quant_error_bounded_by_half_step(bits, symmetric, seed):
+    _check_error_bounded_by_half_step(bits, symmetric, seed)
+
+
+# Deterministic ports of the properties — run without hypothesis.
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("symmetric", [True, False])
+@pytest.mark.parametrize("seed", [0, 1234])
+def test_quant_error_bounded_by_half_step_seeded(bits, symmetric, seed):
+    _check_error_bounded_by_half_step(bits, symmetric, seed)
+
+
+def _check_more_bits_less_error(seed, bits):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
     spec_lo = Q.act_spec(bits)
@@ -90,6 +100,31 @@ def test_property_more_bits_less_error(seed, bits):
     err_lo = float(jnp.mean((Q.fake_quant(x, spec_lo) - x) ** 2))
     err_hi = float(jnp.mean((Q.fake_quant(x, spec_hi) - x) ** 2))
     assert err_hi <= err_lo + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(3, 8))
+def test_property_more_bits_less_error(seed, bits):
+    _check_more_bits_less_error(seed, bits)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 99])
+@pytest.mark.parametrize("bits", [3, 5, 7])
+def test_more_bits_less_error_seeded(seed, bits):
+    _check_more_bits_less_error(seed, bits)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("symmetric", [True, False])
+def test_fake_quant_idempotent(bits, symmetric):
+    """Q(Q(x)) == Q(x): fake-quant output lies exactly on the grid."""
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.standard_normal((8, 64)) * 3, jnp.float32)
+    spec = Q.QuantSpec(bits=bits, symmetric=symmetric, per="tensor")
+    once = Q.fake_quant(x, spec)
+    twice = Q.fake_quant(once, spec)
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(once),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_quant_range_definitions():

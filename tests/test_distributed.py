@@ -22,11 +22,10 @@ def _run_subprocess(body: str):
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        from repro.distributed.compat import make_mesh, shard_map
         from jax.sharding import PartitionSpec as P
         assert len(jax.devices()) == 8
-        mesh = jax.make_mesh((8,), ("dp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("dp",))
     """) + textwrap.dedent(body)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=300,
@@ -76,6 +75,7 @@ def test_checkpoint_roundtrip(tmp_path):
     assert latest_step(str(tmp_path)) == 9
 
 
+@pytest.mark.slow
 def test_watchdog_fires_and_beats():
     import time
     from repro.distributed.fault_tolerance import StepWatchdog
@@ -100,6 +100,7 @@ def test_straggler_monitor_flags_outlier():
     assert mon.flagged
 
 
+@pytest.mark.slow
 def test_failure_injection_and_restart_loop(tmp_path):
     from repro.distributed.fault_tolerance import (FailureInjector,
                                                    run_with_restarts)
@@ -118,14 +119,15 @@ def test_failure_injection_and_restart_loop(tmp_path):
     assert inj.tripped == [3, 7]
 
 
+@pytest.mark.slow
 def test_sharding_rules_full_configs():
     """Every full-config param gets a legal spec on an abstract 16x16 mesh
     (divisibility respected; replicate-fallback for odd shapes)."""
-    from jax.sharding import AbstractMesh
     from repro.configs import ARCH_IDS, get_config
+    from repro.distributed.compat import abstract_mesh
     from repro.distributed.sharding import params_sharding
     from repro.models import build
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     for arch in ARCH_IDS:
         cfg = get_config(arch)
         model = build(cfg)
@@ -142,6 +144,7 @@ def test_sharding_rules_full_configs():
 
 # ------------------------------------------------------------ multi-device
 
+@pytest.mark.slow
 def test_compressed_mean_subprocess():
     _run_subprocess("""
         from repro.distributed.compression import (compressed_mean,
@@ -174,6 +177,7 @@ def test_compressed_mean_subprocess():
     """)
 
 
+@pytest.mark.slow
 def test_ring_matmul_subprocess():
     _run_subprocess("""
         from repro.distributed.overlap import ring_matmul, reference_matmul
@@ -197,6 +201,7 @@ def test_ring_matmul_subprocess():
     """)
 
 
+@pytest.mark.slow
 def test_pipeline_parallel_subprocess():
     _run_subprocess("""
         from repro.distributed.pipeline_parallel import (pipeline_apply,
@@ -216,6 +221,7 @@ def test_pipeline_parallel_subprocess():
     """)
 
 
+@pytest.mark.slow
 def test_elastic_remesh_subprocess(tmp_path):
     _run_subprocess(f"""
         from repro.checkpoint import restore, save

@@ -1,0 +1,197 @@
+"""Int4-packed quantization path: pack/unpack round trips, the W4A8
+Pallas kernel vs the pure-jnp oracle, awkward shapes, QLinear dispatch
+equivalence, and packed-checkpoint save/restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizers import pack_int4, unpack_int4
+from repro.kernels import ref
+from repro.kernels.quant_matmul_w4 import quant_matmul_w4
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ------------------------------------------------------------ pack/unpack --
+
+def test_roundtrip_exact_all_16_nibbles():
+    q = jnp.asarray(np.arange(-8, 8, dtype=np.int8).reshape(16, 1))
+    p = pack_int4(q, axis=0)
+    assert p.shape == (8, 1) and p.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(unpack_int4(p, 16, axis=0)),
+                                  np.asarray(q))
+
+
+@pytest.mark.parametrize("shape,axis", [((64, 32), 0), ((8, 33, 16), -2),
+                                        ((7, 5), 0), ((2, 9, 4), 1)])
+def test_roundtrip_random_shapes(shape, axis):
+    q = jnp.asarray(_rng(sum(shape)).integers(-8, 8, shape), jnp.int8)
+    p = pack_int4(q, axis=axis)
+    n = shape[axis]
+    assert p.shape[axis] == (n + 1) // 2   # bytes halved (rounded up)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(p, n, axis=axis)),
+                                  np.asarray(q))
+
+
+def test_nibble_layout_even_low_odd_high():
+    # byte = (q[2i] & 0xF) | (q[2i+1] << 4), documented storage contract
+    q = jnp.asarray([[-8], [7]], jnp.int8)
+    p = np.asarray(pack_int4(q, axis=0)).astype(np.uint8)
+    assert p[0, 0] == (8 | (7 << 4))  # -8 -> 0x8 low, 7 -> 0x7 high
+
+
+def test_ref_unpack_matches_quantizer_unpack():
+    q = jnp.asarray(_rng(3).integers(-8, 8, (40, 24)), jnp.int8)
+    p = pack_int4(q, axis=0)
+    np.testing.assert_array_equal(np.asarray(ref.unpack_int4(p, 40)),
+                                  np.asarray(q))
+
+
+# ---------------------------------------------------------------- kernel --
+
+def _qmm_inputs(m, n, k, seed):
+    r = _rng(seed)
+    qx = jnp.asarray(r.integers(-128, 128, (m, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-8, 8, (k, n)), jnp.int8)
+    sx = jnp.asarray(r.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    zpx = jnp.asarray(r.integers(-8, 8, (m, 1)), jnp.float32)
+    sw = jnp.asarray(r.uniform(0.01, 0.1, (1, n)), jnp.float32)
+    return qx, sx, zpx, qw, sw
+
+
+@pytest.mark.parametrize("mnk", [(8, 16, 32), (100, 96, 64),
+                                 (256, 384, 512), (33, 65, 129)])
+def test_quant_matmul_w4_matches_ref(mnk):
+    m, n, k = mnk
+    qx, sx, zpx, qw, sw = _qmm_inputs(m, n, k, m * n)
+    qwp = pack_int4(qw, axis=0)
+    got = quant_matmul_w4(qx, sx, zpx, qwp, sw, block_m=32, block_n=32,
+                          block_k=32, interpret=True)
+    want = ref.quant_matmul_w4(qx, sx, zpx, qwp, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_w4_kernel_equals_int8_kernel_on_same_codes():
+    """Packing is storage only: W4 kernel == int8 kernel on identical codes."""
+    from repro.kernels.quant_matmul import quant_matmul
+    qx, sx, zpx, qw, sw = _qmm_inputs(24, 36, 48, 5)
+    got4 = quant_matmul_w4(qx, sx, zpx, pack_int4(qw, axis=0), sw,
+                           block_m=8, block_n=16, block_k=16, interpret=True)
+    got8 = quant_matmul(qx, sx, zpx, qw, sw, block_m=8, block_n=16,
+                        block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got4), np.asarray(got8),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("k", [3, 7, 127])
+def test_odd_k_and_non_multiple_blocks(k):
+    qx, sx, zpx, qw, sw = _qmm_inputs(11, 13, k, k)
+    qwp = pack_int4(qw, axis=0)
+    want = ref.quant_matmul(qx, sx, zpx, qw, sw)
+    got = quant_matmul_w4(qx, sx, zpx, qwp, sw, block_m=8, block_n=8,
+                          block_k=10, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrapper_and_fused_path():
+    from repro.core.hadamard import hadamard_factors
+    from repro.kernels import ops
+    r = _rng(21)
+    d, d_out, toks, kb = 128, 96, 18, 32
+    ha, hb = map(lambda h: jnp.asarray(h, jnp.float32), hadamard_factors(d))
+    sign = jnp.asarray(r.choice([-1.0, 1.0], d), jnp.float32)
+    x = jnp.asarray(r.standard_normal((toks, d)), jnp.float32)
+    blocks = jnp.asarray(r.standard_normal((d // kb, kb, kb)) / np.sqrt(kb),
+                         jnp.float32)
+    qw = jnp.asarray(r.integers(-8, 8, (d, d_out)), jnp.int8)
+    qwp = pack_int4(qw, axis=0)
+    sw = jnp.asarray(r.uniform(0.01, 0.05, (1, d_out)), jnp.float32)
+    y8 = ops.cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
+                                  act_bits=4, interpret=True)
+    y4 = ops.cat_transform_matmul(x, blocks, ha, hb, sign, qwp, sw,
+                                  act_bits=4, packed_int4=True,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y8),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- QLinear + checkpoint --
+
+def test_qlinear_packed_dense_matches_unpacked():
+    from repro.core.qlinear import QLinear, dense, num_weight_bytes
+    from repro.core import transforms as T
+    r = _rng(9)
+    d_in, d_out = 64, 48
+    codes = jnp.asarray(r.integers(-8, 8, (d_in, d_out)), jnp.int8)
+    scale = jnp.asarray(r.uniform(0.01, 0.1, (1, d_out)), jnp.float32)
+    x = jnp.asarray(r.standard_normal((5, d_in)), jnp.float32)
+    flat = QLinear(codes, scale, T.Identity(), act_bits=0, w_bits=4)
+    packed = QLinear(pack_int4(codes, axis=-2), scale, T.Identity(),
+                     act_bits=0, w_bits=4, d_in=d_in)
+    np.testing.assert_array_equal(np.asarray(dense(packed, x)),
+                                  np.asarray(dense(flat, x)))
+    assert num_weight_bytes(packed) < num_weight_bytes(flat)
+
+
+@pytest.mark.slow
+def test_pipeline_packs_int4_and_preserves_logits(tiny_cfg, tiny_model,
+                                                  tiny_params, tiny_calib):
+    from repro.core.pipeline import QuantizeConfig, quantize_model
+    from repro.core.qlinear import QLinear, unpacked_qweight
+    from repro.data import make_batch
+    qc = QuantizeConfig(w_bits=4, a_bits=4, transform="cat", cat_block=16)
+    qp = quantize_model(tiny_model, tiny_params, qc, tiny_calib)
+    qf = quantize_model(tiny_model, tiny_params,
+                        __import__("dataclasses").replace(qc, pack_int4=False),
+                        tiny_calib)
+    lp = [l for l in jax.tree.leaves(
+        qp, is_leaf=lambda x: isinstance(x, QLinear)) if isinstance(l, QLinear)]
+    lf = [l for l in jax.tree.leaves(
+        qf, is_leaf=lambda x: isinstance(x, QLinear)) if isinstance(l, QLinear)]
+    assert lp and all(l.packed and l.w_bits == 4 for l in lp)
+    # packed codes unpack to exactly the flat codes; buffers are ~half size
+    for a, b in zip(lp, lf):
+        np.testing.assert_array_equal(np.asarray(unpacked_qweight(a)),
+                                      np.asarray(b.qweight))
+        assert a.qweight.size * 2 >= b.qweight.size
+    toks = jnp.asarray(make_batch(tiny_cfg, 16, 2, seed=4)["tokens"])
+    l1, _ = tiny_model.prefill(qp, toks, tiny_model.init_cache(2, 24))
+    l2, _ = tiny_model.prefill(qf, toks, tiny_model.init_cache(2, 24))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+@pytest.mark.slow
+def test_packed_checkpoint_roundtrip(tmp_path, tiny_model, tiny_quantized):
+    import json
+    import os
+    from repro import checkpoint as ck
+    ck.save(str(tmp_path), 1, tiny_quantized, meta={"quant": "w4a4-cat"})
+    man = json.load(open(os.path.join(str(tmp_path), "step_00000001",
+                                      "manifest.json")))
+    assert man["meta"]["packed_int4"] is True
+    assert man["meta"]["packed_int4_layers"]
+    out = ck.restore(str(tmp_path), None, tiny_quantized)
+    for a, b in zip(jax.tree.leaves(tiny_quantized),
+                    jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_weight_memory_report():
+    from repro.core import transforms as T
+    from repro.core.qlinear import QLinear
+    from repro.launch.serve import weight_memory_report
+    r = _rng(13)
+    codes = jnp.asarray(r.integers(-8, 8, (32, 16)), jnp.int8)
+    scale = jnp.ones((1, 16), jnp.float32)
+    params = {"a": QLinear(pack_int4(codes, axis=-2), scale, T.Identity(),
+                           act_bits=4, w_bits=4, d_in=32),
+              "b": jnp.zeros((8, 8), jnp.float32)}
+    rep = weight_memory_report(params)
+    assert rep == {"qlinear_layers": 1,
+                   "weight_bytes": 16 * 16 + 16 * 4,
+                   "packed_int4": True}

@@ -11,6 +11,7 @@ import pytest
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+@pytest.mark.slow
 def test_trainer_loss_decreases(tmp_path):
     from repro.launch.train import train
     final, losses = train(arch="catlm_60m", steps=30, batch=4, seq=64,
@@ -19,6 +20,7 @@ def test_trainer_loss_decreases(tmp_path):
     assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
 
 
+@pytest.mark.slow
 def test_trainer_survives_injected_failures(tmp_path):
     from repro import checkpoint as ck
     from repro.launch.train import train
@@ -31,6 +33,7 @@ def test_trainer_survives_injected_failures(tmp_path):
     assert len(losses) > 24
 
 
+@pytest.mark.slow
 def test_trainer_resume_bit_exact(tmp_path):
     """20 straight steps == 10 steps + checkpoint + restart + 10 steps."""
     from repro.launch.train import train
@@ -44,6 +47,7 @@ def test_trainer_resume_bit_exact(tmp_path):
     np.testing.assert_allclose(l_straight[-1], l_resumed[-1], rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_mixed_precision_trainer():
     from repro.launch.train import train
     final, losses = train(arch="catlm_60m", steps=10, batch=2, seq=32,
@@ -51,6 +55,7 @@ def test_mixed_precision_trainer():
     assert final == 10 and np.isfinite(losses).all()
 
 
+@pytest.mark.slow
 def test_serve_quantized_generates():
     from repro.launch.serve import serve_benchmark
     out = serve_benchmark(arch="catlm_60m", batch=2, prompt_len=16, gen=8,
@@ -59,6 +64,7 @@ def test_serve_quantized_generates():
     assert out["tok_per_s"] > 0
 
 
+@pytest.mark.slow
 def test_dryrun_single_cell_subprocess(tmp_path):
     """The dry-run machinery (512 fake devices, production mesh, lower +
     compile + analyses) on the smallest cell, isolated in a subprocess."""

@@ -19,6 +19,7 @@ def _smoke_model(arch):
     return cfg, build(cfg)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_shapes_and_finite(arch):
     cfg, model = _smoke_model(arch)
@@ -34,6 +35,7 @@ def test_train_step_shapes_and_finite(arch):
     assert bool(jnp.isfinite(gn)), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_prefill_decode_consistency(arch):
     """decode(t) after prefill(t0..t-1) must match teacher-forced forward."""
@@ -75,6 +77,7 @@ def test_prefill_decode_consistency(arch):
         rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["gemma2_2b", "granite_moe_1b_a400m",
                                   "rwkv6_7b", "zamba2_7b"])
 def test_two_train_steps_reduce_loss_direction(arch):

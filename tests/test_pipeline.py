@@ -19,6 +19,10 @@ from repro.core.qlinear import QLinear
 from repro.data import calibration_batches, make_batch
 from repro.models import build
 
+# Full-pipeline e2e runs: minutes on CPU. `pytest -m "not slow"` skips
+# them; the int4/QLinear fast coverage lives in test_int4_packed.py.
+pytestmark = pytest.mark.slow
+
 
 def _setup(arch, seed=0):
     cfg = get_config(arch).smoke()
@@ -90,17 +94,19 @@ def test_transform_ordering_on_ce():
 
 
 def test_gptq_pipeline_beats_rtn_at_4bit():
-    cfg, model, params, calib = _setup("catlm_60m", seed=3)
-    evalb = [make_batch(cfg, 64, 4, seed=77)]
-    outs = {}
-    for m in ("rtn", "gptq"):
-        qcfg = QuantizeConfig(w_bits=4, a_bits=16, transform="none",
-                              w_method=m)
-        # a_bits=16 isolates weight quantization
-        qcfg = QuantizeConfig(w_bits=4, a_bits=0, transform="none", w_method=m)
-        qp = quantize_model(model, params, qcfg, calib)
-        outs[m] = eval_quantized(model, params, qp, evalb)["delta"]
-    assert outs["gptq"] <= outs["rtn"] + 0.01, outs
+    """Averaged over seeds: a single tiny eval batch is noise-dominated,
+    so one seed can rank the methods either way."""
+    outs = {"rtn": [], "gptq": []}
+    for seed in (3, 4):
+        cfg, model, params, calib = _setup("catlm_60m", seed=seed)
+        evalb = [make_batch(cfg, 64, 4, seed=77 + seed)]
+        for m in ("rtn", "gptq"):
+            # a_bits=0 isolates weight quantization
+            qcfg = QuantizeConfig(w_bits=4, a_bits=0, transform="none",
+                                  w_method=m)
+            qp = quantize_model(model, params, qcfg, calib)
+            outs[m].append(eval_quantized(model, params, qp, evalb)["delta"])
+    assert np.mean(outs["gptq"]) <= np.mean(outs["rtn"]) + 0.01, outs
 
 
 def test_kv_cache_quant_small_effect():

@@ -4,6 +4,7 @@ and the restored model serves identical logits."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import checkpoint as ck
 from repro.configs import get_config
@@ -12,6 +13,7 @@ from repro.data import calibration_batches, make_batch
 from repro.models import build
 
 
+@pytest.mark.slow
 def test_qlinear_checkpoint_roundtrip(tmp_path):
     cfg = get_config("catlm_60m").smoke()
     model = build(cfg)
