@@ -63,6 +63,16 @@ def main() -> None:
     emit("kernel_qmatmul_w4_pallas_interpret", us4p,
          "correctness-path (TPU perf from roofline: half HBM weight traffic)")
 
+    # --- decode-shaped W4A8 GEMV (M<=8 single-token rows): the serving
+    # engine's per-step weight traffic is w4_bytes, vs w8_bytes for int8
+    usg, _ = timer(jax.jit(lambda *a: ref.quant_gemv_w4(*a)),
+                   qx[:4], sx[:4], zx[:4], qwp, sw, warmup=2, iters=10)
+    emit("kernel_qgemv_w4_ref_jnp", usg,
+         f"m=4 weight_bytes={w4_bytes} gbps={w4_bytes/usg/1e3:.2f}")
+    usgp, _ = timer(lambda *a: ops.qgemv_w4(*a, interpret=True),
+                    qx[:4], sx[:4], zx[:4], qwp, sw, warmup=1, iters=2)
+    emit("kernel_qgemv_w4_pallas_interpret", usgp, "correctness-path")
+
     blocks = jnp.asarray(rng.standard_normal((d // 64, 64, 64)) / 8,
                          jnp.float32)
     f = jax.jit(lambda x: ref.block_diag_matmul(x, blocks))

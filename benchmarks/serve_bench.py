@@ -1,0 +1,65 @@
+"""Continuous-batching serving benchmark: the same seeded mixed-prompt
+workload drained through the engine with fp, int8, and int4-packed
+weights (int8 slot KV cache for the quantized rows). Emits the usual CSV
+rows plus a JSON artifact (results/serve_bench.json) with TTFT, tok/s,
+and slot-occupancy per variant.
+
+On CPU the absolute tok/s is a correctness-path number (interpret-mode
+kernels, smoke model); the interesting readouts are the relative weight
+bytes and the scheduler metrics (occupancy, queue drain, TTFT spread).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro.launch.serve import serve_benchmark
+
+VARIANTS = [
+    # name, transform, w_bits, a_bits, kv_bits
+    ("fp", "fp", 0, 0, 0),
+    ("int8", "cat", 8, 8, 8),
+    ("int4_packed", "cat", 4, 4, 8),
+]
+
+
+def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
+         out_path: str = "results/serve_bench.json") -> None:
+    rows = {}
+    for name, transform, w_bits, a_bits, kv_bits in VARIANTS:
+        out = serve_benchmark(arch="catlm_60m", batch=n_slots, gen=gen,
+                              transform=transform, w_bits=w_bits,
+                              a_bits=a_bits, kv_bits=kv_bits,
+                              n_requests=n_requests, mixed=True, seed=0)
+        eng = out["engine"]
+        rows[name] = {
+            "transform": transform, "w_bits": w_bits, "kv_bits": kv_bits,
+            "ttft_s_mean": eng["ttft_s_mean"],
+            "ttft_s_max": eng["ttft_s_max"],
+            "tok_per_s": eng["tok_per_s"],
+            "occupancy_mean": eng["occupancy_mean"],
+            "queue_depth_max": eng["queue_depth_max"],
+            "steps": eng["steps"],
+            "n_requests": eng["n_requests"],
+            "n_slots": eng["n_slots"],
+            "quantized_kv": eng["quantized_kv"],
+            "weight_bytes": out.get("weight_bytes", 0),
+            "packed_int4": out.get("packed_int4", False),
+        }
+        emit(f"serve_{name}", eng["wall_s"] * 1e6,
+             f"tok_per_s={eng['tok_per_s']:.1f} "
+             f"ttft_ms={eng['ttft_s_mean'] * 1e3:.0f} "
+             f"occ={eng['occupancy_mean']:.2f} "
+             f"wbytes={out.get('weight_bytes', 0)}")
+    if rows.get("int8") and rows.get("int4_packed"):
+        r = rows["int4_packed"]["weight_bytes"] / rows["int8"]["weight_bytes"]
+        emit("serve_w4_vs_w8_weight_bytes", 0.0, f"ratio={r:.2f}")
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=2)
+    emit("serve_bench_json", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,25 @@ def main():
     print("  fp :", gen_fp[0][:24].tolist())
     print("  q4 :", gen_q[0][:24].tolist())
 
+    # --- the same quantized model behind the continuous-batching engine:
+    # mixed-prompt FIFO queue, int8 slot KV cache, prefill-on-admit
+    import dataclasses
+    from repro.data import request_workload
+    from repro.launch.engine import ServeEngine
+    from repro.models import build
+    qcfg8 = dataclasses.replace(cfg, kv_quant_bits=8)
+    model8 = build(qcfg8)
+    reqs = request_workload(qcfg8, 2 * args.batch, gen=args.gen, seed=11)
+    engine = ServeEngine(model8, qparams, n_slots=args.batch,
+                         max_len=max(len(r["tokens"]) for r in reqs)
+                         + args.gen + 8)
+    engine.run(reqs)
+    s = engine.summary()
+    print(f"\nengine: {s['n_requests']} mixed-length reqs on "
+          f"{s['n_slots']} slots (int8 KV cache) -> "
+          f"{s['tok_per_s']:.1f} tok/s, ttft {s['ttft_s_mean']*1e3:.0f}ms, "
+          f"occupancy {s['occupancy_mean']:.2f}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,1 +1,2 @@
-from repro.data.synthetic import calibration_batches, make_batch, token_stream  # noqa: F401
+from repro.data.synthetic import (calibration_batches, make_batch,  # noqa: F401
+                                  request_workload, token_stream)

@@ -54,6 +54,27 @@ def make_batch(cfg, seq_len: int, batch: int, *, seed: int = 0,
     return out
 
 
+def request_workload(cfg, n_requests: int = 8, *, gen: int = 16,
+                     lengths: tuple = (8, 12, 16, 24), min_gen: int = 0,
+                     seed: int = 0) -> list:
+    """Mixed-prompt-length serving workload for the continuous-batching
+    engine: a list of ``{"rid", "tokens" (P,) int32, "max_new_tokens"}``.
+
+    Prompt lengths are drawn from the small ``lengths`` set (every
+    distinct length costs one prefill compile in the engine); decode
+    budgets are uniform in [min_gen or gen, gen]. Deterministic per
+    (seed, rid): request ``rid``'s tokens do not depend on n_requests, so
+    a prefix of the workload is a smaller workload."""
+    reqs = []
+    for rid in range(n_requests):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 7, rid]))
+        p = int(rng.choice(lengths))
+        toks = token_stream(cfg.vocab, p, 1, seed=seed, step=1000 + rid)[0]
+        g = int(rng.integers(min_gen, gen + 1)) if min_gen else gen
+        reqs.append({"rid": rid, "tokens": toks, "max_new_tokens": g})
+    return reqs
+
+
 def calibration_batches(cfg, n_seqs: int = 16, seq_len: int = 128,
                         batch: int = 4, seed: int = 1234):
     """The paper uses 128 x 2048-token calibration sequences; smoke-scale

@@ -16,7 +16,7 @@ from .block_matmul import block_diag_matmul
 from .dynamic_quant import dynamic_quant
 from .hadamard import hadamard_transform
 from .quant_matmul import quant_matmul
-from .quant_matmul_w4 import quant_matmul_w4
+from .quant_matmul_w4 import _GEMV_M, quant_gemv_w4, quant_matmul_w4
 
 
 def default_interpret() -> bool:
@@ -43,6 +43,11 @@ def qmatmul_w4(qx, sx, zpx, qw_packed, sw, **kw):
     return quant_matmul_w4(qx, sx, zpx, qw_packed, sw, **kw)
 
 
+def qgemv_w4(qx, sx, zpx, qw_packed, sw, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return quant_gemv_w4(qx, sx, zpx, qw_packed, sw, **kw)
+
+
 def block_matmul(x, blocks, **kw):
     kw.setdefault("interpret", default_interpret())
     return block_diag_matmul(x, blocks, **kw)
@@ -64,7 +69,12 @@ def cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
     xf = hadamard(xf, ha, hb, sign, **kw)
     qx, sx, zpx = dyn_quant(xf, bits=act_bits, symmetric=False, **kw)
     if packed_int4:
-        y = qmatmul_w4(qx, sx, zpx, qw, sw, **kw)
+        # decode shapes (few single-token rows) serve straight from the
+        # packed buffer via the GEMV kernel instead of the tiled matmul
+        if qx.shape[0] <= _GEMV_M:
+            y = qgemv_w4(qx, sx, zpx, qw, sw, **kw)
+        else:
+            y = qmatmul_w4(qx, sx, zpx, qw, sw, **kw)
     else:
         y = qmatmul(qx, sx, zpx, qw, sw, **kw)
     return y.reshape(*lead, qw.shape[1]).astype(x.dtype)

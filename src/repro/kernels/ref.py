@@ -85,6 +85,19 @@ def quant_matmul_w4(qx: jnp.ndarray, sx: jnp.ndarray, zpx: jnp.ndarray,
     return quant_matmul(qx, sx, zpx, qw, sw, out_dtype=out_dtype)
 
 
+def quant_gemv_w4(qx: jnp.ndarray, sx: jnp.ndarray, zpx: jnp.ndarray,
+                  qw_packed: jnp.ndarray, sw: jnp.ndarray,
+                  out_dtype=jnp.float32) -> jnp.ndarray:
+    """Decode-shaped W4A8 GEMV oracle (M ∈ [1, 8] rows).
+
+    The math is exactly ``quant_matmul_w4`` — the kernel differs only in
+    blocking (M resident in VMEM, no M grid) — so the oracle delegates;
+    a separate name keeps the kernel↔oracle pairing one-to-one."""
+    from repro.kernels.quant_matmul_w4 import _GEMV_M
+    assert qx.shape[0] <= _GEMV_M, qx.shape
+    return quant_matmul_w4(qx, sx, zpx, qw_packed, sw, out_dtype=out_dtype)
+
+
 def block_diag_matmul(x: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
     """y = x @ Tᵀ for block-diagonal T = Diag(B_1..B_n); blocks (n, k, k).
     y[..., i, a] = Σ_b blocks[i, a, b] · x[..., i, b]."""

@@ -1,0 +1,274 @@
+"""Continuous-batching serve engine over a slot-allocated quantized KV cache.
+
+Requests with arbitrary prompt lengths enter a FIFO queue. The engine owns
+a shared KV cache of ``n_slots`` independent sequence rows (int8 codes +
+per-token scales when the config sets ``kv_quant_bits``, bf16/f32
+otherwise). Each engine step interleaves:
+
+  1. **admit** — while a slot is free and the queue is non-empty, pop the
+     oldest request, prefill it alone (batch-1) against its slot's cache
+     rows, and emit its first token from the prefill logits (TTFT).
+  2. **decode** — one batched greedy decode step over *all* occupied
+     slots at once; every slot sits at its own sequence position, so the
+     cache write and RoPE/attention run with per-slot position vectors
+     (``models.layers.cache_update*`` with (B,) ``pos``).
+  3. **retire** — slots whose request hit ``max_new_tokens`` (or the
+     optional ``eos_id``) return their result and go back on the free
+     list; the next queued request is admitted on the following step.
+
+Slot reuse needs no cache zeroing: a new occupant's prefill overwrites
+rows [0, P) and every stale row beyond the slot's position is masked by
+the causal (position >= kv position) test inside ``chunked_attention``.
+
+Decode always runs the full ``n_slots`` batch (free slots carry a dummy
+token at position 0 whose output is discarded) so the decode step compiles
+exactly once; prefill compiles once per distinct prompt length — keep the
+workload's length set small or bucket lengths upstream when compile time
+matters. See ``src/repro/launch/README.md`` for the architecture diagram.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------- request types
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: ``prompt`` (P,) int32, decode budget."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    submit_time: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray            # (P + G,) prompt followed by G generated
+    prompt_len: int
+    ttft_s: float                 # submit -> first token (prefill) latency
+    admit_step: int
+    retire_step: int
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    slot: int
+    generated: list
+    admit_step: int
+    ttft_s: float
+
+
+# ------------------------------------------------------------- jit helpers
+
+@functools.lru_cache(maxsize=8)
+def jitted_model_fns(model):
+    """(jit prefill, jit decode) cached per model so repeated engine /
+    oracle runs over the same model share compilations."""
+    return jax.jit(model.prefill), jax.jit(model.decode)
+
+
+@jax.jit
+def _take_slot(cache, slot):
+    """Slice one slot's batch-1 cache out of the shared (L, n_slots, ...)
+    arrays (leaf layout: layer axis 0, slot axis 1)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache)
+
+
+# Donating the shared cache lets XLA write the slot rows in place on
+# backends with buffer donation (TPU); CPU falls back to a copy. A full
+# take/put round trip per admission is still O(cache) HBM traffic — if
+# admission ever dominates, prefill directly into the shared cache via
+# the per-slot _write_kv machinery instead.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _put_slot(cache, part, slot):
+    return jax.tree.map(
+        lambda a, p: jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1),
+        cache, part)
+
+
+# ------------------------------------------------------------------ engine
+
+class ServeEngine:
+    """Continuous-batching greedy-decode engine (see module docstring).
+
+    ``model``/``params`` follow ``repro.models.Model``; the model family
+    must support per-slot position vectors in its decode cache (dense
+    does). ``max_len`` bounds prompt + generated tokens per slot.
+    """
+
+    _SLOT_FAMILIES = ("dense", "moe", "vlm")   # families with (B,) pos decode
+
+    def __init__(self, model, params, *, n_slots: int = 4,
+                 max_len: int = 256, eos_id: Optional[int] = None):
+        family = getattr(model.cfg, "family", "dense")
+        if family not in self._SLOT_FAMILIES:
+            raise NotImplementedError(
+                f"ServeEngine needs per-slot position vectors in decode, "
+                f"implemented for {self._SLOT_FAMILIES}; got family "
+                f"{family!r}")
+        self.model, self.params = model, params
+        self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
+        cache = model.init_cache(n_slots, max_len)
+        self.quantized_kv = "k_scale" in cache
+        self._cache = {k: v for k, v in cache.items() if k != "pos"}
+        self._pos = np.zeros((n_slots,), np.int32)     # per-slot positions
+        self._free = list(range(n_slots))
+        self._queue: deque[Request] = deque()
+        self._active: dict[int, _Active] = {}          # slot -> request
+        self._prefill, self._decode = jitted_model_fns(model)
+        self.step_count = 0
+        self._next_rid = 0
+        self.events: list[tuple] = []   # ("admit"|"retire", rid, slot, step)
+        self.results: dict[int, RequestResult] = {}
+        self.metrics = {"queue_depth": [], "occupancy": [],
+                        "generated_tokens": 0, "decode_steps": 0}
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, prompt, max_new_tokens: int, rid: Optional[int] = None
+               ) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if not len(prompt):
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new_tokens({max_new_tokens}) "
+                f"exceeds max_len={self.max_len}")
+        if rid is None:
+            rid = self._next_rid
+        elif (rid in self.results
+              or any(r.req.rid == rid for r in self._active.values())
+              or any(r.rid == rid for r in self._queue)):
+            raise ValueError(f"duplicate request id {rid}")
+        self._next_rid = max(self._next_rid, rid) + 1
+        self._queue.append(Request(rid, prompt, max_new_tokens,
+                                   submit_time=time.time()))
+        return rid
+
+    # ------------------------------------------------------ slot lifecycle
+
+    def _admit(self) -> None:
+        while self._free and self._queue:
+            slot = min(self._free)          # deterministic: lowest free slot
+            self._free.remove(slot)
+            req = self._queue.popleft()
+            p = len(req.prompt)
+            part = dict(_take_slot(self._cache, np.int32(slot)),
+                        pos=jnp.int32(0))
+            logits, part = self._prefill(self.params, req.prompt[None], part)
+            part.pop("pos")
+            self._cache = _put_slot(self._cache, part, np.int32(slot))
+            self._pos[slot] = p
+            tok = int(np.argmax(np.asarray(logits[0, -1])))
+            rec = _Active(req, slot, [tok], self.step_count,
+                          time.time() - req.submit_time)
+            self.metrics["generated_tokens"] += 1
+            self.events.append(("admit", req.rid, slot, self.step_count))
+            if self._finished(rec):
+                self._retire(rec)
+            else:
+                self._active[slot] = rec
+
+    def _finished(self, rec: _Active) -> bool:
+        return (len(rec.generated) >= rec.req.max_new_tokens
+                or rec.generated[-1] == self.eos_id)
+
+    def _retire(self, rec: _Active) -> None:
+        rid = rec.req.rid
+        if rid in self.results:
+            raise RuntimeError(f"request {rid} retired twice")
+        self.results[rid] = RequestResult(
+            rid=rid,
+            tokens=np.concatenate([rec.req.prompt,
+                                   np.asarray(rec.generated, np.int32)]),
+            prompt_len=len(rec.req.prompt),
+            ttft_s=rec.ttft_s,
+            admit_step=rec.admit_step,
+            retire_step=self.step_count,
+        )
+        self.events.append(("retire", rid, rec.slot, self.step_count))
+        self._active.pop(rec.slot, None)
+        self._pos[rec.slot] = 0       # free slots idle at position 0
+        self._free.append(rec.slot)
+
+    # --------------------------------------------------------------- step
+
+    def step(self) -> dict:
+        """One admit + batched-decode + retire cycle; returns step stats."""
+        self._admit()
+        self.metrics["queue_depth"].append(len(self._queue))
+        occ = len(self._active) / self.n_slots
+        self.metrics["occupancy"].append(occ)
+        if self._active:
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            for slot, rec in self._active.items():
+                toks[slot, 0] = rec.generated[-1]
+            cache = dict(self._cache, pos=jnp.asarray(self._pos))
+            logits, cache = self._decode(self.params, jnp.asarray(toks),
+                                         cache)
+            cache.pop("pos")
+            self._cache = cache
+            logits = np.asarray(logits)
+            self.metrics["decode_steps"] += 1
+            for slot, rec in list(self._active.items()):
+                self._pos[slot] += 1          # the fed token was cached
+                rec.generated.append(int(np.argmax(logits[slot, -1])))
+                self.metrics["generated_tokens"] += 1
+                if self._finished(rec):
+                    self._retire(rec)
+        self.step_count += 1
+        return {"queue_depth": self.metrics["queue_depth"][-1],
+                "occupancy": occ, "active": len(self._active)}
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and not self._active
+
+    def run(self, requests=None) -> dict[int, RequestResult]:
+        """Submit ``requests`` (dicts with tokens/max_new_tokens, see
+        ``repro.data.request_workload``) and step until drained."""
+        for r in requests or ():
+            self.submit(r["tokens"], r["max_new_tokens"], rid=r.get("rid"))
+        t0 = time.time()
+        while not self.idle:
+            self.step()
+        self.metrics["wall_s"] = time.time() - t0
+        return self.results
+
+    # ------------------------------------------------------------ metrics
+
+    def summary(self) -> dict:
+        m = self.metrics
+        ttfts = [r.ttft_s for r in self.results.values()]
+        return {
+            "n_requests": len(self.results),
+            "n_slots": self.n_slots,
+            "steps": self.step_count,
+            "decode_steps": m["decode_steps"],
+            "generated_tokens": m["generated_tokens"],
+            "wall_s": m.get("wall_s", 0.0),
+            "tok_per_s": (m["generated_tokens"] / m["wall_s"]
+                          if m.get("wall_s") else 0.0),
+            "ttft_s_mean": float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_s_max": float(np.max(ttfts)) if ttfts else 0.0,
+            "occupancy_mean": (float(np.mean(m["occupancy"]))
+                               if m["occupancy"] else 0.0),
+            "queue_depth_max": (int(np.max(m["queue_depth"]))
+                                if m["queue_depth"] else 0),
+            "quantized_kv": self.quantized_kv,
+        }

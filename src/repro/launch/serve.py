@@ -1,17 +1,18 @@
-"""Quantized serving driver: batched generation with the paper's deployed
-pipeline (CAT-transformed int8 weights, dynamic act quant, int8 KV cache).
+"""Quantized serving CLI — a thin front end over the continuous-batching
+engine (``repro.launch.engine``) with the paper's deployed pipeline:
+CAT-transformed int8/int4-packed weights, dynamic act quant, int8 KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch catlm_60m \
-        --batch 4 --prompt-len 32 --gen 32 --transform cat
+        --requests 8 --n-slots 4 --gen 32 --transform cat --kv-bits 8
 
-Continuous batched decode over a request queue: requests arrive with
-different prompt lengths, get left-padded into slots, prefill once, then
-step the whole batch each iteration, retiring finished slots.
+Requests enter a FIFO queue deeper than the slot count; the engine
+prefills on admit, steps the occupied slots as one batch, and retires /
+reuses slots as requests finish. ``greedy_generate`` stays here as the
+static-batch oracle the engine is tested against (token-identical).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +21,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.pipeline import QuantizeConfig, quantize_model
 from repro.core.qlinear import iter_qlinear, num_weight_bytes
-from repro.data import calibration_batches, make_batch
+from repro.data import calibration_batches, make_batch, request_workload
+from repro.launch.engine import ServeEngine, jitted_model_fns
 from repro.models import build
 
 
@@ -37,11 +39,13 @@ def weight_memory_report(params) -> dict:
 
 def greedy_generate(model, params, prompts: jnp.ndarray, gen: int,
                     max_len: int, temperature: float = 0.0, seed: int = 0):
-    """prompts (B, P) -> tokens (B, P+gen). Greedy (or sampled) decode."""
+    """prompts (B, P) -> tokens (B, P+gen). Greedy (or sampled) decode.
+
+    Static batching (every row at the same position) — the per-request
+    oracle for the continuous-batching engine."""
     b, p = prompts.shape
     cache = model.init_cache(b, max_len)
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode)
+    prefill, decode = jitted_model_fns(model)
     logits, cache = prefill(params, prompts, cache)
     out = [prompts]
     key = jax.random.PRNGKey(seed)
@@ -58,17 +62,16 @@ def greedy_generate(model, params, prompts: jnp.ndarray, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
-def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
-                    prompt_len: int = 32, gen: int = 32,
-                    transform: str = "cat", w_bits: int = 4,
-                    a_bits: int = 4, smoke: bool = True, seed: int = 0):
-    """Quantize then serve a batch; returns timing + output stats."""
+def build_served_model(arch: str, transform: str, w_bits: int, a_bits: int,
+                       kv_bits: int, smoke: bool, seed: int):
+    """-> (cfg, model, params, weight-memory report). ``transform='fp'``
+    skips PTQ; ``kv_bits>0`` serves from the int8 slot KV cache."""
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.smoke()
+    cfg = cfg.scaled(kv_quant_bits=kv_bits)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(seed))
-
     mem = {}
     if transform != "fp":
         qcfg = QuantizeConfig(w_bits=w_bits, a_bits=a_bits,
@@ -77,44 +80,85 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
         calib = calibration_batches(cfg, n_seqs=8, seq_len=64, batch=4)
         params = quantize_model(model, params, qcfg, calib)
         mem = weight_memory_report(params)
+    return cfg, model, params, mem
 
-    prompts = jnp.asarray(
-        make_batch(cfg, prompt_len, batch, seed=seed)["tokens"])
-    max_len = prompt_len + gen + 8
 
-    t0 = time.time()
-    tokens = greedy_generate(model, params, prompts, gen, max_len)
-    tokens.block_until_ready()
-    wall = time.time() - t0
-    return {
+def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
+                    prompt_len: int = 32, gen: int = 32,
+                    transform: str = "cat", w_bits: int = 4,
+                    a_bits: int = 4, smoke: bool = True, seed: int = 0,
+                    kv_bits: int = 8, n_slots: int = 0,
+                    n_requests: int = 0, mixed: bool = False):
+    """Quantize then serve a workload through the engine.
+
+    Default (``mixed=False``): ``batch`` uniform-length requests so
+    ``tokens`` stacks to (batch, prompt_len+gen). ``mixed=True`` runs the
+    seeded mixed-prompt-length workload instead (per-request sequences in
+    ``results``). ``n_slots`` defaults to ``batch`` (0 = auto)."""
+    cfg, model, params, mem = build_served_model(
+        arch, transform, w_bits, a_bits, kv_bits, smoke, seed)
+
+    n_requests = n_requests or batch
+    if mixed:
+        requests = request_workload(cfg, n_requests, gen=gen, seed=seed)
+    else:
+        toks = np.asarray(make_batch(cfg, prompt_len, n_requests,
+                                     seed=seed)["tokens"])
+        requests = [{"rid": i, "tokens": toks[i], "max_new_tokens": gen}
+                    for i in range(n_requests)]
+    max_prompt = max(len(r["tokens"]) for r in requests)
+    engine = ServeEngine(model, params, n_slots=n_slots or batch,
+                         max_len=max_prompt + gen + 8)
+    results = engine.run(requests)
+    summary = engine.summary()
+    out = {
         "arch": arch, "transform": transform,
-        "tokens": np.asarray(tokens),
-        "wall_s": wall,
-        "tok_per_s": batch * gen / wall,
+        "results": results,
+        "wall_s": summary["wall_s"],
+        "tok_per_s": summary["tok_per_s"],
+        "engine": summary,
         **mem,
     }
+    if not mixed:
+        out["tokens"] = np.stack([results[i].tokens
+                                  for i in range(n_requests)])
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="catlm_60m")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", "--n-slots", dest="batch", type=int,
+                    default=4, help="engine slot count")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="queue depth (default: slot count)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-prompt-length workload")
     ap.add_argument("--transform", default="cat",
                     choices=["fp", "none", "smoothquant", "hadamard", "cat"])
     ap.add_argument("--w-bits", "--bits-w", dest="w_bits", type=int,
                     default=4)
     ap.add_argument("--a-bits", "--bits-a", dest="a_bits", type=int,
                     default=4)
+    ap.add_argument("--kv-bits", type=int, default=8,
+                    help="KV-cache quant bits (0 = fp cache)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
     out = serve_benchmark(arch=args.arch, batch=args.batch,
                           prompt_len=args.prompt_len, gen=args.gen,
                           transform=args.transform, w_bits=args.w_bits,
-                          a_bits=args.a_bits, smoke=not args.full_config)
+                          a_bits=args.a_bits, smoke=not args.full_config,
+                          kv_bits=args.kv_bits, n_requests=args.requests,
+                          mixed=args.mixed)
+    eng = out["engine"]
     print(f"{out['arch']} [{out['transform']}]: "
-          f"{out['tok_per_s']:.1f} tok/s ({out['wall_s']:.2f}s wall)")
+          f"{out['tok_per_s']:.1f} tok/s ({out['wall_s']:.2f}s wall) | "
+          f"{eng['n_requests']} reqs on {eng['n_slots']} slots, "
+          f"ttft {eng['ttft_s_mean'] * 1e3:.0f}ms, "
+          f"occupancy {eng['occupancy_mean']:.2f}, "
+          f"kv={'int8' if eng['quantized_kv'] else 'fp'}")
     if out.get("qlinear_layers"):
         kind = "int4-packed" if out["packed_int4"] else "int8"
         print(f"  weights: {out['weight_bytes'] / 2**20:.2f} MiB across "

@@ -187,7 +187,11 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
         x = jnp.concatenate([extra_embed.astype(cd), x], axis=1)
     b, s, _ = x.shape
     pos = cache["pos"] if cache is not None else jnp.int32(0)
-    positions = pos + jnp.arange(s, dtype=jnp.int32)
+    steps = jnp.arange(s, dtype=jnp.int32)
+    # pos is a scalar (static batching: whole batch at one offset) or a
+    # (B,) vector of per-slot offsets (the serve engine's continuous
+    # batching) — positions then (S,) or (B, S); rope/attention take both.
+    positions = pos[:, None] + steps if getattr(pos, "ndim", 0) else pos + steps
     flags = is_global_flags(cfg)
 
     cache_layers = None

@@ -163,13 +163,26 @@ def glu_mlp(p, x, act: str):
 
 # ---------------------------------------------------------------- KV cache
 
+def _write_kv(cache, x, pos):
+    """Write x (B, S, ...) into cache (B, Smax, ...) at rows [pos, pos+S).
+
+    ``pos`` is either a scalar (whole batch at the same offset — static
+    batching) or an (B,) int32 vector of per-slot offsets (continuous
+    batching: every slot sits at its own sequence position)."""
+    x = x.astype(cache.dtype)
+    if getattr(pos, "ndim", 0) == 0:
+        start = (0, pos) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, x, start)
+
+    def one(c, u, p):
+        return jax.lax.dynamic_update_slice(c, u, (p,) + (0,) * (c.ndim - 1))
+    return jax.vmap(one)(cache, x, pos)
+
+
 def cache_update(cache_k, cache_v, k, v, pos):
-    """Write k, v (B, S, KV, hd) into caches at [pos, pos+S)."""
-    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
-                                      (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
-                                      (0, pos, 0, 0))
-    return ck, cv
+    """Write k, v (B, S, KV, hd) into caches at [pos, pos+S); ``pos``
+    scalar or (B,) per-slot offsets (see ``_write_kv``)."""
+    return _write_kv(cache_k, k, pos), _write_kv(cache_v, v, pos)
 
 
 def quantize_kv(x: jnp.ndarray, bits: int):
@@ -184,11 +197,9 @@ def quantize_kv(x: jnp.ndarray, bits: int):
 
 
 def cache_update_quantized(ck, cks, cv, cvs, k, v, pos, bits: int):
-    """int8 KV-cache write: codes + per-token scales at [pos, pos+S)."""
+    """int8 KV-cache write: codes + per-token scales at [pos, pos+S);
+    ``pos`` scalar or (B,) per-slot offsets (see ``_write_kv``)."""
     kq, ks = quantize_kv(k, bits)
     vq, vs = quantize_kv(v, bits)
-    ck = jax.lax.dynamic_update_slice(ck, kq, (0, pos, 0, 0))
-    cks = jax.lax.dynamic_update_slice(cks, ks, (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cv, vq, (0, pos, 0, 0))
-    cvs = jax.lax.dynamic_update_slice(cvs, vs, (0, pos, 0, 0))
-    return ck, cks, cv, cvs
+    return (_write_kv(ck, kq, pos), _write_kv(cks, ks, pos),
+            _write_kv(cv, vq, pos), _write_kv(cvs, vs, pos))

@@ -1,0 +1,111 @@
+"""Decode-shaped W4A8 GEMV Pallas kernel vs the pure-jnp oracle: seeded
+cases + hypothesis property tests over M ∈ [1, 8], odd K, K not a multiple
+of the block, and agreement with the tiled matmul kernel."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core.quantizers import pack_int4
+from repro.kernels import ops, ref
+from repro.kernels.quant_matmul_w4 import quant_gemv_w4, quant_matmul_w4
+
+
+def _inputs(m, n, k, seed):
+    r = np.random.default_rng(seed)
+    qx = jnp.asarray(r.integers(-128, 128, (m, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-8, 8, (k, n)), jnp.int8)
+    sx = jnp.asarray(r.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    zpx = jnp.asarray(r.integers(-8, 8, (m, 1)), jnp.float32)
+    sw = jnp.asarray(r.uniform(0.01, 0.1, (1, n)), jnp.float32)
+    return qx, sx, zpx, qw, sw
+
+
+def _check_gemv_matches_ref(m, n, k, seed, block_n=32, block_k=32):
+    qx, sx, zpx, qw, sw = _inputs(m, n, k, seed)
+    qwp = pack_int4(qw, axis=0)
+    got = quant_gemv_w4(qx, sx, zpx, qwp, sw, block_n=block_n,
+                        block_k=block_k, interpret=True)
+    want = ref.quant_gemv_w4(qx, sx, zpx, qwp, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------- seeded
+
+@pytest.mark.parametrize("m", [1, 3, 8])
+@pytest.mark.parametrize("nk", [(16, 32), (65, 129), (96, 64), (7, 3)])
+def test_gemv_matches_ref_seeded(m, nk):
+    n, k = nk
+    _check_gemv_matches_ref(m, n, k, seed=m * 1000 + n + k)
+
+
+@pytest.mark.parametrize("k,block_k", [(3, 10), (127, 32), (50, 40),
+                                       (129, 512)])
+def test_gemv_odd_and_non_multiple_k(k, block_k):
+    """Odd K (padded nibble) and K not a multiple of the block."""
+    _check_gemv_matches_ref(3, 24, k, seed=k, block_k=block_k)
+
+
+def test_gemv_equals_tiled_matmul_kernel():
+    """Blocking is the only difference: GEMV == tiled kernel on one input."""
+    qx, sx, zpx, qw, sw = _inputs(8, 48, 96, 17)
+    qwp = pack_int4(qw, axis=0)
+    got_g = quant_gemv_w4(qx, sx, zpx, qwp, sw, block_n=16, block_k=32,
+                          interpret=True)
+    got_m = quant_matmul_w4(qx, sx, zpx, qwp, sw, block_m=8, block_n=16,
+                            block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_g), np.asarray(got_m),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_gemv_rejects_large_m():
+    qx, sx, zpx, qw, sw = _inputs(9, 16, 32, 0)
+    with pytest.raises(AssertionError):
+        quant_gemv_w4(qx, sx, zpx, pack_int4(qw, axis=0), sw,
+                      interpret=True)
+
+
+def test_ops_decode_path_dispatches_to_gemv():
+    """cat_transform_matmul serves decode shapes (M<=8) from the packed
+    buffer via the GEMV kernel — result equals the int8-code path."""
+    from repro.core.hadamard import hadamard_factors
+    r = np.random.default_rng(23)
+    d, d_out = 64, 48
+    ha, hb = map(lambda h: jnp.asarray(h, jnp.float32), hadamard_factors(d))
+    sign = jnp.asarray(r.choice([-1.0, 1.0], d), jnp.float32)
+    x = jnp.asarray(r.standard_normal((1, d)), jnp.float32)  # decode row
+    blocks = jnp.asarray(r.standard_normal((d // 16, 16, 16)) / 4,
+                         jnp.float32)
+    qw = jnp.asarray(r.integers(-8, 8, (d, d_out)), jnp.int8)
+    sw = jnp.asarray(r.uniform(0.01, 0.05, (1, d_out)), jnp.float32)
+    y8 = ops.cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
+                                  act_bits=8, interpret=True)
+    y4 = ops.cat_transform_matmul(x, blocks, ha, hb, sign,
+                                  pack_int4(qw, axis=0), sw, act_bits=8,
+                                  packed_int4=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y8),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- property
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    n=st.integers(1, 64),
+    k=st.integers(1, 160),
+    block_k=st.sampled_from([10, 32, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_gemv_matches_ref(m, n, k, block_k, seed):
+    _check_gemv_matches_ref(m, n, k, seed, block_k=block_k)
+
+
+# Deterministic ports of the property — run without hypothesis.
+@pytest.mark.parametrize("m", [1, 3, 8])
+@pytest.mark.parametrize("k,block_k", [(1, 10), (31, 32), (160, 64)])
+@pytest.mark.parametrize("seed", [0, 1234])
+def test_gemv_matches_ref_ports(m, k, block_k, seed):
+    _check_gemv_matches_ref(m, 33, k, seed, block_k=block_k)
