@@ -4,6 +4,10 @@ weights (int8 slot KV cache for the quantized rows). Emits the usual CSV
 rows plus a JSON artifact (results/serve_bench.json) with TTFT, tok/s,
 and slot-occupancy per variant.
 
+With >= 4 local devices (XLA_FLAGS=--xla_force_host_platform_device_count
+on CPU) it also serves the int4-packed variant tensor-parallel — a tp=1
+vs tp=4 pair on an MHA smoke config, token-identity checked row-to-row.
+
 On CPU the absolute tok/s is a correctness-path number (interpret-mode
 kernels, smoke model); the interesting readouts are the relative weight
 bytes and the scheduler metrics (occupancy, queue drain, TTFT spread).
@@ -22,6 +26,48 @@ VARIANTS = [
     ("int8", "cat", 8, 8, 8),
     ("int4_packed", "cat", 4, 4, 8),
 ]
+
+# tensor-parallel pair: identical MHA config (smoke catlm has
+# n_kv_heads=2, which cannot split whole heads over tp=4) served at tp=1
+# and on a (1, 4) ("data", "model") mesh.
+TP_OVERRIDES = {"n_kv_heads": 4}
+
+
+def _tp_rows(rows, n_requests, n_slots, gen) -> None:
+    import jax
+
+    if len(jax.devices()) < 4:
+        emit("serve_int4_tp4", 0.0,
+             "skipped=needs-4-devices (XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8)")
+        return
+    from repro.distributed.compat import make_mesh
+    outs = {}
+    for name, mesh in (("int4_tp1", None),
+                       ("int4_tp4", make_mesh((1, 4), ("data", "model")))):
+        out = serve_benchmark(arch="catlm_60m", batch=n_slots, gen=gen,
+                              transform="cat", w_bits=4, a_bits=4,
+                              kv_bits=8, n_requests=n_requests, mixed=True,
+                              seed=0, mesh=mesh, cfg_overrides=TP_OVERRIDES)
+        eng = out["engine"]
+        outs[name] = out
+        rows[name] = {
+            "transform": "cat", "w_bits": 4, "kv_bits": 8,
+            "mesh": eng["mesh"],
+            "ttft_s_mean": eng["ttft_s_mean"],
+            "tok_per_s": eng["tok_per_s"],
+            "occupancy_mean": eng["occupancy_mean"],
+            "n_requests": eng["n_requests"], "n_slots": eng["n_slots"],
+        }
+        emit(f"serve_{name}", eng["wall_s"] * 1e6,
+             f"tok_per_s={eng['tok_per_s']:.1f} "
+             f"ttft_ms={eng['ttft_s_mean'] * 1e3:.0f} mesh={eng['mesh']}")
+    identical = all(
+        (outs["int4_tp1"]["results"][rid].tokens
+         == outs["int4_tp4"]["results"][rid].tokens).all()
+        for rid in outs["int4_tp1"]["results"])
+    rows["int4_tp4"]["token_identical_to_tp1"] = bool(identical)
+    emit("serve_tp4_token_identity", 0.0, f"identical={identical}")
 
 
 def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
@@ -55,6 +101,7 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
     if rows.get("int8") and rows.get("int4_packed"):
         r = rows["int4_packed"]["weight_bytes"] / rows["int8"]["weight_bytes"]
         emit("serve_w4_vs_w8_weight_bytes", 0.0, f"ratio={r:.2f}")
+    _tp_rows(rows, n_requests, n_slots, gen)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=2)

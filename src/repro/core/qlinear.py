@@ -86,6 +86,71 @@ def dense(p, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
     return x @ p.astype(cd)
 
 
+def dense_tp(p, x: jnp.ndarray, axis: str, compute_dtype=None,
+             use_kernel: bool = False,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Row-parallel ``dense`` under ``shard_map``: the contracted input
+    dim is sharded over mesh axis ``axis`` (x (..., K_local), weight
+    (K_local, d_out) — packed: (K_local/2, d_out)); returns the full
+    (..., d_out) output psummed over ``axis``.
+
+    fp weights contract locally and psum. For QLinear the fused transform
+    mixes the FULL input dim (block-CAT / Hadamard factors span head
+    boundaries), so the activation is all-gathered first, transformed and
+    fake-quantized globally — per-token act scales are then identical to
+    the single-device path — and only the local K slice contracts against
+    the local weight shard before the psum. ``use_kernel=True`` runs that
+    local contraction through the packed W4A8 Pallas kernels
+    (``ops.qgemv_w4`` for decode shapes, ``ops.qmatmul_w4`` otherwise)
+    on real int8 activation codes instead of the portable fake-quant
+    matmul (rtol-level, not bitwise, equal to it)."""
+    cd = compute_dtype or x.dtype
+
+    def psum_matmul(xl, w):
+        # Partial contractions accumulate in f32 and round to the compute
+        # dtype ONCE after the psum — products of bf16 inputs are exact in
+        # f32, so this matches the single-device matmul's f32 accumulation
+        # instead of stacking a bf16 rounding per shard.
+        y = xl.astype(cd).astype(jnp.float32) @ w.astype(jnp.float32)
+        return jax.lax.psum(y, axis).astype(cd)
+
+    if not isinstance(p, QLinear):
+        return psum_matmul(x, p.astype(cd))
+    k_local = p.qweight.shape[-2] * (2 if p.packed else 1)
+    idx = jax.lax.axis_index(axis)
+    xf = jax.lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
+    if k_local >= xf.shape[-1]:
+        # spec fallback left this row weight replicated (its K dim didn't
+        # divide the axis): every device holds the full contraction, so
+        # slicing + psum would multiply the output by the axis size —
+        # compute it whole instead.
+        return dense(p, xf, compute_dtype=compute_dtype)
+    xf = T.apply(p.transform, xf)
+    if use_kernel:
+        from repro.kernels import ops
+        kw = {} if interpret is None else {"interpret": interpret}
+        lead = xf.shape[:-1]
+        qx, sx, zpx = ops.dyn_quant(xf.reshape(-1, xf.shape[-1]),
+                                    bits=p.act_bits or 8, symmetric=False,
+                                    **kw)
+        qx = jax.lax.dynamic_slice_in_dim(qx, idx * k_local, k_local, axis=1)
+        if p.packed:
+            from repro.kernels.quant_matmul_w4 import _GEMV_M
+            run = ops.qgemv_w4 if qx.shape[0] <= _GEMV_M else ops.qmatmul_w4
+        else:
+            run = ops.qmatmul
+        y = run(qx, sx, zpx, p.qweight, p.scale, **kw)
+        y = y.reshape(*lead, p.scale.shape[-1]).astype(cd)
+        return jax.lax.psum(y, axis)
+    if p.act_bits:
+        xf = fake_quant(xf, act_spec(p.act_bits))
+    xl = jax.lax.dynamic_slice_in_dim(xf, idx * k_local, k_local,
+                                      axis=xf.ndim - 1)
+    # p is the LOCAL shard: unpack to k_local rows, not the global d_in
+    w = unpack_int4(p.qweight, k_local, axis=-2) if p.packed else p.qweight
+    return psum_matmul(xl, w.astype(cd) * p.scale.astype(cd))
+
+
 def dense_params(p) -> jnp.ndarray:
     """Materialize the effective fp weight of either param kind (analysis)."""
     if isinstance(p, QLinear):

@@ -54,20 +54,36 @@ def block_matmul(x, blocks, **kw):
 
 
 def cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
-                         act_bits: int = 4, packed_int4: bool = False, **kw):
+                         act_bits: int = 4, packed_int4: bool = False,
+                         axis_name=None, **kw):
     """The paper's deployed quantized linear layer, end to end:
     y ≈ W·T⁻¹·Q(T x) with T = H·M̂_block, weights pre-fused & pre-quantized.
 
     x (..., d) fp; blocks (n,k,k); qw (d, d_out) int8 — or, with
     ``packed_int4``, (ceil(d/2), d_out) nibble-packed int4 codes;
     sw (1, d_out) f32.
-    """
+
+    ``axis_name`` marks a call from INSIDE shard_map on a tensor-parallel
+    mesh axis: ``x`` is replicated (the CAT/Hadamard transform and the
+    per-token act-quant scales span the full d, so they run globally) and
+    ``qw`` is this device's K shard — whole packed bytes per shard. The
+    matching slice of the quantized activation contracts locally (decode
+    shapes still route to the GEMV kernel; M is unchanged by K sharding)
+    and partial outputs psum over ``axis_name`` — the zero-point
+    correction is linear in K, so per-shard ``sx·sw·(acc − zp·colsum)``
+    terms sum exactly."""
     lead = x.shape[:-1]
     d = x.shape[-1]
     xf = x.reshape(-1, d)
     xf = block_matmul(xf, blocks, **kw)
     xf = hadamard(xf, ha, hb, sign, **kw)
     qx, sx, zpx = dyn_quant(xf, bits=act_bits, symmetric=False, **kw)
+    if axis_name is not None:
+        k_local = qw.shape[0] * 2 if packed_int4 else qw.shape[0]
+        if packed_int4:
+            assert d % 2 == 0, "sharded packed serving needs even K"
+        idx = jax.lax.axis_index(axis_name)
+        qx = jax.lax.dynamic_slice_in_dim(qx, idx * k_local, k_local, axis=1)
     if packed_int4:
         # decode shapes (few single-token rows) serve straight from the
         # packed buffer via the GEMV kernel instead of the tiled matmul
@@ -77,4 +93,47 @@ def cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
             y = qmatmul_w4(qx, sx, zpx, qw, sw, **kw)
     else:
         y = qmatmul(qx, sx, zpx, qw, sw, **kw)
+    if axis_name is not None:
+        y = jax.lax.psum(y, axis_name)
     return y.reshape(*lead, qw.shape[1]).astype(x.dtype)
+
+
+# ------------------------------------------------- tensor-parallel wrappers
+
+def _w4_tp(kernel, qx, sx, zpx, qw_packed, sw, mesh, axis, kw):
+    """Run a W4A8 kernel with the contraction sharded over ``axis``: qx
+    splits on K, qw_packed on packed-K (whole bytes per shard), and the
+    per-device partial — dequant and zero-point correction are both
+    linear in K — psums to the exact full contraction."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
+
+    kw.setdefault("interpret", default_interpret())
+    tp = mesh.shape[axis]
+    k = qx.shape[1]
+    assert k % (2 * tp) == 0, (
+        f"K={k} must split into whole packed bytes across {axis}={tp}")
+    assert qw_packed.shape[0] * 2 == k, (qx.shape, qw_packed.shape)
+
+    def body(qxl, sxl, zxl, qwl, swl):
+        return jax.lax.psum(kernel(qxl, sxl, zxl, qwl, swl, **kw), axis)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, axis), P(None, None), P(None, None),
+                  P(axis, None), P(None, None)),
+        out_specs=P(None, None), check_vma=False,
+    )(qx, sx, zpx, qw_packed, sw)
+
+
+def qmatmul_w4_tp(qx, sx, zpx, qw_packed, sw, *, mesh, axis: str = "model",
+                  **kw):
+    """K-sharded ``qmatmul_w4`` under shard_map with a psum over ``axis``."""
+    return _w4_tp(quant_matmul_w4, qx, sx, zpx, qw_packed, sw, mesh, axis, kw)
+
+
+def qgemv_w4_tp(qx, sx, zpx, qw_packed, sw, *, mesh, axis: str = "model",
+                **kw):
+    """K-sharded decode GEMV under shard_map with a psum over ``axis``."""
+    return _w4_tp(quant_gemv_w4, qx, sx, zpx, qw_packed, sw, mesh, axis, kw)

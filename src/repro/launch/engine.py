@@ -111,7 +111,9 @@ class ServeEngine:
     _SLOT_FAMILIES = ("dense", "moe", "vlm")   # families with (B,) pos decode
 
     def __init__(self, model, params, *, n_slots: int = 4,
-                 max_len: int = 256, eos_id: Optional[int] = None):
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 mesh=None, tp_axis: str = "model",
+                 tp_mode: str = "gather", tp_kernels: bool = False):
         family = getattr(model.cfg, "family", "dense")
         if family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
@@ -127,13 +129,93 @@ class ServeEngine:
         self._free = list(range(n_slots))
         self._queue: deque[Request] = deque()
         self._active: dict[int, _Active] = {}          # slot -> request
-        self._prefill, self._decode = jitted_model_fns(model)
+        self.mesh = mesh
+        if mesh is None:
+            self._prefill, self._decode = jitted_model_fns(model)
+        else:
+            self._init_mesh_fns(mesh, tp_axis, tp_mode, tp_kernels)
         self.step_count = 0
         self._next_rid = 0
         self.events: list[tuple] = []   # ("admit"|"retire", rid, slot, step)
         self.results: dict[int, RequestResult] = {}
         self.metrics = {"queue_depth": [], "occupancy": [],
                         "generated_tokens": 0, "decode_steps": 0}
+
+    # -------------------------------------------------------- mesh serving
+
+    def _init_mesh_fns(self, mesh, tp_axis: str, tp_mode: str,
+                       tp_kernels: bool) -> None:
+        """Tensor-parallel serving: params and the shared slot KV cache
+        are device_put with quantization-aware shardings
+        (``distributed.sharding.tp_param_specs`` / ``tp_cache_specs``) and
+        prefill/decode run the TP forward inside shard_map. Slot
+        bookkeeping (queue, free list, positions) stays host-side and is
+        identical to the single-device engine; in ``tp_mode="gather"``
+        (default) the decoded tokens are bit-identical to it too."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.qlinear import iter_qlinear
+        from repro.distributed.compat import shard_map
+        from repro.distributed import sharding as shlib
+
+        cfg = self.model.cfg
+        if cfg.n_experts:
+            raise NotImplementedError("mesh serving covers the dense "
+                                      "(non-MoE) family")
+        tp = mesh.shape[tp_axis]
+        packed = any(l.packed for _, l in iter_qlinear(self.params))
+        unit = 2 * tp if (packed and tp_mode == "psum") else tp
+        for dim, name in ((cfg.n_heads, "n_heads"),
+                          (cfg.n_kv_heads, "n_kv_heads")):
+            if dim % tp:
+                raise ValueError(
+                    f"{name}={dim} must divide by {tp_axis}={tp} (whole "
+                    f"heads per shard)")
+        for dim, name in ((cfg.q_dim, "q_dim"), (cfg.d_ff, "d_ff")):
+            if dim % unit:
+                raise ValueError(
+                    f"{name}={dim} must divide by {unit} "
+                    f"({tp_axis}={tp}"
+                    + (", ×2: int4-packed row shards hold whole bytes)"
+                       if unit != tp else ")"))
+        dp_axis = next((a for a in ("data", "pod")
+                        if a in mesh.axis_names
+                        and self.n_slots % mesh.shape[a] == 0
+                        and mesh.shape[a] > 1), None)
+
+        pspecs = shlib.tp_param_specs(self.params, mesh, axis=tp_axis,
+                                      cfg=cfg, row_mode=tp_mode)
+        dec_cspecs = shlib.tp_cache_specs(self._cache, mesh, axis=tp_axis,
+                                          dp_axis=dp_axis)
+        part_shapes = jax.eval_shape(
+            lambda c: jax.tree.map(lambda a: a[:, :1], c), self._cache)
+        pre_cspecs = shlib.tp_cache_specs(part_shapes, mesh, axis=tp_axis)
+        self.params = jax.device_put(self.params, shlib.named(pspecs, mesh))
+        self._cache = jax.device_put(self._cache,
+                                     shlib.named(dec_cspecs, mesh))
+        tok_spec = P(dp_axis, None)
+        # the (B,) per-slot position vector shards with the slot axis
+        pos_spec = P(dp_axis) if dp_axis else P()
+        tp_kw = dict(tp_axis=tp_axis, tp_mode=tp_mode, tp_kernels=tp_kernels)
+        model = self.model
+
+        def pre(p, t, c):
+            return model.prefill(p, t, c, **tp_kw)
+
+        def dec(p, t, c):
+            return model.decode(p, t, c, **tp_kw)
+
+        self._prefill = jax.jit(shard_map(
+            pre, mesh=mesh,
+            in_specs=(pspecs, P(None, None), dict(pre_cspecs, pos=P())),
+            out_specs=(P(None, None, None), dict(pre_cspecs, pos=P())),
+            check_vma=False))
+        self._decode = jax.jit(shard_map(
+            dec, mesh=mesh,
+            in_specs=(pspecs, tok_spec, dict(dec_cspecs, pos=pos_spec)),
+            out_specs=(P(dp_axis, None, None),
+                       dict(dec_cspecs, pos=pos_spec)),
+            check_vma=False))
 
     # ------------------------------------------------------------- intake
 
@@ -271,4 +353,6 @@ class ServeEngine:
             "queue_depth_max": (int(np.max(m["queue_depth"]))
                                 if m["queue_depth"] else 0),
             "quantized_kv": self.quantized_kv,
+            "mesh": (dict(self.mesh.shape) if self.mesh is not None
+                     else None),
         }

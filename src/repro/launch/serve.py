@@ -13,6 +13,7 @@ static-batch oracle the engine is tested against (token-identical).
 from __future__ import annotations
 
 import argparse
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,13 +64,16 @@ def greedy_generate(model, params, prompts: jnp.ndarray, gen: int,
 
 
 def build_served_model(arch: str, transform: str, w_bits: int, a_bits: int,
-                       kv_bits: int, smoke: bool, seed: int):
+                       kv_bits: int, smoke: bool, seed: int,
+                       cfg_overrides: Optional[dict] = None):
     """-> (cfg, model, params, weight-memory report). ``transform='fp'``
-    skips PTQ; ``kv_bits>0`` serves from the int8 slot KV cache."""
+    skips PTQ; ``kv_bits>0`` serves from the int8 slot KV cache;
+    ``cfg_overrides`` are extra ``cfg.scaled`` fields (e.g. a
+    TP-divisible head count for mesh serving)."""
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.smoke()
-    cfg = cfg.scaled(kv_quant_bits=kv_bits)
+    cfg = cfg.scaled(kv_quant_bits=kv_bits, **(cfg_overrides or {}))
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     mem = {}
@@ -83,20 +87,37 @@ def build_served_model(arch: str, transform: str, w_bits: int, a_bits: int,
     return cfg, model, params, mem
 
 
+def parse_mesh(spec: str):
+    """``--mesh dp,tp`` -> a ("data", "model") device mesh (None when the
+    spec is empty or 1,1). Needs dp*tp local devices — force host devices
+    with XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU."""
+    if not spec:
+        return None
+    dp, tp = (int(v) for v in spec.split(","))
+    if dp * tp <= 1:
+        return None
+    from repro.distributed.compat import make_mesh
+    return make_mesh((dp, tp), ("data", "model"))
+
+
 def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     prompt_len: int = 32, gen: int = 32,
                     transform: str = "cat", w_bits: int = 4,
                     a_bits: int = 4, smoke: bool = True, seed: int = 0,
                     kv_bits: int = 8, n_slots: int = 0,
-                    n_requests: int = 0, mixed: bool = False):
+                    n_requests: int = 0, mixed: bool = False,
+                    mesh=None, cfg_overrides: Optional[dict] = None):
     """Quantize then serve a workload through the engine.
 
     Default (``mixed=False``): ``batch`` uniform-length requests so
     ``tokens`` stacks to (batch, prompt_len+gen). ``mixed=True`` runs the
     seeded mixed-prompt-length workload instead (per-request sequences in
-    ``results``). ``n_slots`` defaults to ``batch`` (0 = auto)."""
+    ``results``). ``n_slots`` defaults to ``batch`` (0 = auto). ``mesh``
+    serves tensor-parallel (sharded int4 weights + sharded KV cache,
+    token-identical to single-device — see launch/README.md)."""
     cfg, model, params, mem = build_served_model(
-        arch, transform, w_bits, a_bits, kv_bits, smoke, seed)
+        arch, transform, w_bits, a_bits, kv_bits, smoke, seed,
+        cfg_overrides=cfg_overrides)
 
     n_requests = n_requests or batch
     if mixed:
@@ -108,7 +129,7 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     for i in range(n_requests)]
     max_prompt = max(len(r["tokens"]) for r in requests)
     engine = ServeEngine(model, params, n_slots=n_slots or batch,
-                         max_len=max_prompt + gen + 8)
+                         max_len=max_prompt + gen + 8, mesh=mesh)
     results = engine.run(requests)
     summary = engine.summary()
     out = {
@@ -144,6 +165,9 @@ def main() -> None:
                     default=4)
     ap.add_argument("--kv-bits", type=int, default=8,
                     help="KV-cache quant bits (0 = fp cache)")
+    ap.add_argument("--mesh", default="",
+                    help="dp,tp device mesh (axes data,model) for "
+                         "tensor-parallel serving, e.g. --mesh 1,4")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
     out = serve_benchmark(arch=args.arch, batch=args.batch,
@@ -151,14 +175,15 @@ def main() -> None:
                           transform=args.transform, w_bits=args.w_bits,
                           a_bits=args.a_bits, smoke=not args.full_config,
                           kv_bits=args.kv_bits, n_requests=args.requests,
-                          mixed=args.mixed)
+                          mixed=args.mixed, mesh=parse_mesh(args.mesh))
     eng = out["engine"]
+    mesh_note = (f", mesh={eng['mesh']}" if eng.get("mesh") else "")
     print(f"{out['arch']} [{out['transform']}]: "
           f"{out['tok_per_s']:.1f} tok/s ({out['wall_s']:.2f}s wall) | "
           f"{eng['n_requests']} reqs on {eng['n_slots']} slots, "
           f"ttft {eng['ttft_s_mean'] * 1e3:.0f}ms, "
           f"occupancy {eng['occupancy_mean']:.2f}, "
-          f"kv={'int8' if eng['quantized_kv'] else 'fp'}")
+          f"kv={'int8' if eng['quantized_kv'] else 'fp'}{mesh_note}")
     if out.get("qlinear_layers"):
         kind = "int4-packed" if out["packed_int4"] else "int8"
         print(f"  weights: {out['weight_bytes'] / 2**20:.2f} MiB across "

@@ -90,17 +90,38 @@ def init(cfg, rng) -> dict:
 # ----------------------------------------------------------------- forward
 
 def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
-                taps=None, layer_idx=None):
+                taps=None, layer_idx=None, tp_axis=None,
+                tp_mode: str = "gather", tp_kernels=False):
     """cache_sl: per-layer cache slices dict ({"k","v"[,"k_scale","v_scale"]})
-    or None. Returns (x, new_cache_sl, aux)."""
+    or None. Returns (x, new_cache_sl, aux).
+
+    With ``tp_axis`` the body runs INSIDE shard_map on a tensor-parallel
+    mesh axis: wq/wk/wv/wg/wu arrive column-sharded (whole local heads /
+    FFN columns — head counts are derived from the projection shapes, not
+    cfg) and the KV cache slices are head-sharded congruently. The
+    row-position layers (wo/wd) follow ``tp_mode``: ``"gather"``
+    all-gathers the head-/FFN-sharded activation and contracts against a
+    replicated weight (bitwise-identical to single device — column slices
+    of a matmul are exact); ``"psum"`` keeps the weight K-sharded and
+    psums partial contractions via ``qlinear.dense_tp`` (rtol-level;
+    ``tp_kernels=True`` additionally routes the local contraction through
+    the packed W4A8 Pallas kernels)."""
     b, s, d = x.shape
     cd = x.dtype
 
+    def row_dense(p, h):
+        if tp_axis is None:
+            return qlinear.dense(p, h)
+        if tp_mode == "psum":
+            return qlinear.dense_tp(p, h, tp_axis, use_kernel=tp_kernels)
+        h = jax.lax.all_gather(h, tp_axis, axis=h.ndim - 1, tiled=True)
+        return qlinear.dense(p, h)
+
     h = rms_norm(x, lp["ln1"])
     _tap(taps, layer_idx, "attn_in", h)
-    q = qlinear.dense(lp["wq"], h).reshape(b, s, cfg.n_heads, cfg.head_dim)
-    k = qlinear.dense(lp["wk"], h).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
-    v = qlinear.dense(lp["wv"], h).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = qlinear.dense(lp["wq"], h).reshape(b, s, -1, cfg.head_dim)
+    k = qlinear.dense(lp["wk"], h).reshape(b, s, -1, cfg.head_dim)
+    v = qlinear.dense(lp["wv"], h).reshape(b, s, -1, cfg.head_dim)
     if cfg.qk_norm:
         q = rms_norm(q, lp["q_norm"])
         k = rms_norm(k, lp["k_norm"])
@@ -139,9 +160,9 @@ def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
     o = chunked_attention(q, k_att, v_att,
                           q_positions=positions, causal=True, window=window,
                           attn_softcap=cfg.attn_softcap)
-    o = o.reshape(b, s, cfg.q_dim)
+    o = o.reshape(b, s, -1)
     _tap(taps, layer_idx, "o_in", o)
-    attn_out = qlinear.dense(lp["wo"], o)
+    attn_out = row_dense(lp["wo"], o)
     if cfg.post_norms:
         attn_out = rms_norm(attn_out, lp["ln1_post"])
     x = x + attn_out
@@ -159,7 +180,7 @@ def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
         else:
             hmid = act(qlinear.dense(lp["wu"], h2))
         _tap(taps, layer_idx, "down_in", hmid)
-        mlp_out = qlinear.dense(lp["wd"], hmid)
+        mlp_out = row_dense(lp["wd"], hmid)
         aux = jnp.zeros((), jnp.float32)
     if cfg.post_norms:
         mlp_out = rms_norm(mlp_out, lp["ln2_post"])
@@ -176,10 +197,21 @@ def _tap(taps, layer_idx, name, x):
 
 
 def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
-            taps=None, unroll: bool = False):
+            taps=None, unroll: bool = False, tp_axis=None,
+            tp_mode: str = "gather", tp_kernels: bool = False):
     """-> (hidden (B, S, D), aux_loss, new_cache). ``tokens`` (B, S) int32;
     ``extra_embed`` (B, P, D) is prepended (vlm prefix); with ``cache`` the
-    attention runs against the cache and writes k/v at cache['pos']."""
+    attention runs against the cache and writes k/v at cache['pos'].
+
+    ``tp_axis`` names a mesh axis when the forward runs inside shard_map
+    with params sharded per ``distributed.sharding.tp_param_specs`` (same
+    ``tp_mode``); the embedding, residual stream, norms, and logits stay
+    replicated, so the output is bitwise identical to the single-device
+    forward in ``tp_mode="gather"`` and rtol-level in ``"psum"`` (see
+    ``_layer_body``)."""
+    if tp_axis is not None and cfg.n_experts:
+        raise NotImplementedError("tensor-parallel forward covers the "
+                                  "dense (non-MoE) family only")
     cd = _compute_dtype(cfg)
     x = params["embed"][tokens].astype(cd) * jnp.sqrt(float(cfg.d_model)
                                                       ).astype(cd)
@@ -207,7 +239,9 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
             csl = (jax.tree.map(lambda a: a[i], cache_layers)
                    if cache_layers is not None else None)
             x, csl, a = _layer_body(cfg, x, lp, csl, flags[i], pos,
-                                    positions, taps=taps, layer_idx=i)
+                                    positions, taps=taps, layer_idx=i,
+                                    tp_axis=tp_axis, tp_mode=tp_mode,
+                                    tp_kernels=tp_kernels)
             aux = aux + a
             if csl is not None:
                 new_sl.append(csl)
@@ -222,7 +256,9 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
                 lp, csl, fl = xs
             else:
                 (lp, fl), csl = xs, None
-            x, csl, a = _layer_body(cfg, x, lp, csl, fl, pos, positions)
+            x, csl, a = _layer_body(cfg, x, lp, csl, fl, pos, positions,
+                                    tp_axis=tp_axis, tp_mode=tp_mode,
+                                    tp_kernels=tp_kernels)
             return (x, aux + a), csl
 
         if cfg.remat:
@@ -274,13 +310,13 @@ def init_cache(cfg, batch_size: int, max_len: int) -> dict:
             "pos": jnp.int32(0)}
 
 
-def prefill(cfg, params, tokens, cache, extra_embed=None):
+def prefill(cfg, params, tokens, cache, extra_embed=None, **fwd_kw):
     hidden, _, cache = forward(cfg, params, tokens, extra_embed=extra_embed,
-                               cache=cache)
+                               cache=cache, **fwd_kw)
     return logits_fn(cfg, params, hidden[:, -1:]), cache
 
 
-def decode(cfg, params, token, cache):
+def decode(cfg, params, token, cache, **fwd_kw):
     """token (B, 1) -> (logits (B, 1, V), cache)."""
-    hidden, _, cache = forward(cfg, params, token, cache=cache)
+    hidden, _, cache = forward(cfg, params, token, cache=cache, **fwd_kw)
     return logits_fn(cfg, params, hidden), cache

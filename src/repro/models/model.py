@@ -45,8 +45,9 @@ def build(cfg) -> Model:
         init_cache=lambda batch, max_len: mod.init_cache(cfg, batch, max_len),
         prefill=lambda params, tokens, cache, **kw: mod.prefill(
             cfg, params, tokens, cache, **kw),
-        decode=lambda params, token, cache: mod.decode(cfg, params, token,
-                                                       cache),
+        decode=lambda params, token, cache, **kw: mod.decode(cfg, params,
+                                                             token, cache,
+                                                             **kw),
     )
 
 

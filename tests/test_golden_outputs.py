@@ -1,0 +1,39 @@
+"""Golden-output regression: the engine's decoded token sequences for the
+seeded workload must match the checked-in fixtures bit for bit, for all
+three serving configs. A kernel or engine refactor that changes decoded
+tokens — even by one greedy tie-break — fails here; intentional numerics
+changes regenerate via ``tests/golden/regenerate.py`` (see its docstring).
+"""
+import json
+
+import pytest
+
+from golden import regenerate
+
+
+@pytest.mark.parametrize("case", sorted(regenerate.CASES))
+def test_engine_output_matches_golden(case):
+    path = regenerate.fixture_path(case)
+    with open(path) as f:
+        golden = json.load(f)
+    got = regenerate.run_case(case)
+    assert golden["case"] == case
+    assert set(got) == set(golden["tokens"]), (
+        f"request-id set drifted from fixture {path}")
+    for rid, want in golden["tokens"].items():
+        assert got[rid] == want, (
+            f"{case}: decoded tokens for rid={rid} diverged from {path}; "
+            f"if intentional, regenerate via tests/golden/regenerate.py")
+
+
+def test_golden_fixtures_are_self_consistent():
+    """Fixture metadata matches the generator constants, so a regen with
+    edited constants can't silently shrink coverage."""
+    for case in regenerate.CASES:
+        with open(regenerate.fixture_path(case)) as f:
+            golden = json.load(f)
+        assert golden["n_requests"] == regenerate.N_REQUESTS
+        assert golden["gen"] == regenerate.GEN
+        assert tuple(golden["lengths"]) == regenerate.LENGTHS
+        assert golden["seed"] == regenerate.SEED
+        assert len(golden["tokens"]) == regenerate.N_REQUESTS

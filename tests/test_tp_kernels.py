@@ -1,0 +1,211 @@
+"""Tensor-parallel W4A8 kernel paths: the K-sharded shard_map wrappers
+(`ops.qmatmul_w4_tp` / `ops.qgemv_w4_tp`, psum on the contracted model
+axis) must match the single-device kernels at rtol 1e-5, and
+`ops.cat_transform_matmul` called inside shard_map must keep routing
+packed decode shapes (M <= 8) to the GEMV kernel.
+
+In-process cases need >= 4 local devices — they run under the CI mesh job
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) and skip otherwise;
+the subprocess case runs everywhere (slow)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizers import pack_int4
+from repro.kernels import ops
+from repro.kernels.quant_matmul_w4 import quant_matmul_w4
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+
+def _inputs(m, n, k, seed):
+    r = np.random.default_rng(seed)
+    qx = jnp.asarray(r.integers(-128, 128, (m, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-8, 8, (k, n)), jnp.int8)
+    sx = jnp.asarray(r.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    zpx = jnp.asarray(r.integers(-8, 8, (m, 1)), jnp.float32)
+    sw = jnp.asarray(r.uniform(0.01, 0.1, (1, n)), jnp.float32)
+    return qx, sx, zpx, qw, sw
+
+
+@pytest.fixture(scope="module")
+def tp_mesh():
+    from repro.distributed.compat import make_mesh
+    return make_mesh((4,), ("model",))
+
+
+# ------------------------------------------------------- sharded kernels
+
+@needs_mesh
+@pytest.mark.parametrize("m,n,k", [(5, 48, 64), (16, 33, 128), (1, 7, 96)])
+def test_qmatmul_w4_tp_matches_single_device(tp_mesh, m, n, k):
+    qx, sx, zpx, qw, sw = _inputs(m, n, k, seed=m + n + k)
+    qwp = pack_int4(qw, axis=0)
+    want = quant_matmul_w4(qx, sx, zpx, qwp, sw, interpret=True)
+    got = ops.qmatmul_w4_tp(qx, sx, zpx, qwp, sw, mesh=tp_mesh, block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@needs_mesh
+@pytest.mark.parametrize("m", [1, 3, 8])
+def test_qgemv_w4_tp_matches_single_device(tp_mesh, m):
+    qx, sx, zpx, qw, sw = _inputs(m, 24, 64, seed=100 + m)
+    qwp = pack_int4(qw, axis=0)
+    want = quant_matmul_w4(qx, sx, zpx, qwp, sw, interpret=True)
+    got = ops.qgemv_w4_tp(qx, sx, zpx, qwp, sw, mesh=tp_mesh, block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@needs_mesh
+def test_tp_kernels_reject_unsplittable_k(tp_mesh):
+    """K must split into whole packed bytes per shard: 36 / (2*4) != int."""
+    qx, sx, zpx, qw, sw = _inputs(2, 8, 36, seed=0)
+    with pytest.raises(AssertionError):
+        ops.qmatmul_w4_tp(qx, sx, zpx, pack_int4(qw, axis=0), sw,
+                          mesh=tp_mesh)
+
+
+# ------------------------------------- cat_transform_matmul under a mesh
+
+def _cat_inputs(m, d, d_out, seed):
+    from repro.core.hadamard import hadamard_factors
+    r = np.random.default_rng(seed)
+    ha, hb = map(lambda h: jnp.asarray(h, jnp.float32), hadamard_factors(d))
+    sign = jnp.asarray(r.choice([-1.0, 1.0], d), jnp.float32)
+    x = jnp.asarray(r.standard_normal((m, d)), jnp.float32)
+    blocks = jnp.asarray(r.standard_normal((d // 16, 16, 16)) / 4,
+                         jnp.float32)
+    qw = jnp.asarray(r.integers(-8, 8, (d, d_out)), jnp.int8)
+    sw = jnp.asarray(r.uniform(0.01, 0.05, (1, d_out)), jnp.float32)
+    return x, blocks, ha, hb, sign, qw, sw
+
+
+def _cat_tp(mesh, x, blocks, ha, hb, sign, qwp, sw):
+    """cat_transform_matmul from INSIDE shard_map: x replicated (the
+    transform + per-token act scales span the full d), packed weight
+    K-sharded, partial outputs psummed over 'model'."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
+
+    def body(x, blocks, ha, hb, sign, qw, sw):
+        return ops.cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
+                                        act_bits=8, packed_int4=True,
+                                        axis_name="model", interpret=True)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None), P(), P(), P(), P(),
+                  P("model", None), P(None, None)),
+        out_specs=P(None, None), check_vma=False,
+    )(x, blocks, ha, hb, sign, qwp, sw)
+
+
+@needs_mesh
+@pytest.mark.parametrize("m,routed", [(1, "qgemv_w4"), (8, "qgemv_w4"),
+                                      (9, "qmatmul_w4")])
+def test_cat_transform_dispatch_under_mesh(tp_mesh, monkeypatch, m, routed):
+    """Packed decode shapes (M <= 8) must still route to the GEMV kernel
+    inside shard_map — K sharding never changes M — and match the
+    single-device packed path at rtol 1e-5."""
+    x, blocks, ha, hb, sign, qw, sw = _cat_inputs(m, 64, 40, seed=7 * m)
+    qwp = pack_int4(qw, axis=0)
+    want = ops.cat_transform_matmul(x, blocks, ha, hb, sign, qwp, sw,
+                                    act_bits=8, packed_int4=True,
+                                    interpret=True)
+    calls = []
+    for name in ("qgemv_w4", "qmatmul_w4"):
+        real = getattr(ops, name)
+        monkeypatch.setattr(
+            ops, name,
+            lambda *a, _real=real, _n=name, **k: calls.append(_n)
+            or _real(*a, **k))
+    got = _cat_tp(tp_mesh, x, blocks, ha, hb, sign, qwp, sw)
+    assert routed in calls and len(set(calls)) == 1, calls
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------- dense_tp replicated fallback
+
+@needs_mesh
+def test_dense_tp_replicated_row_weight_fallback(tp_mesh):
+    """When tp_param_specs left a row weight replicated (K doesn't divide
+    the axis), dense_tp must compute the contraction whole instead of
+    slicing + psumming tp identical copies (which would scale the output
+    by tp)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import transforms as T
+    from repro.core.qlinear import QLinear, dense, dense_tp
+    from repro.core.quantizers import pack_int4
+    from repro.distributed.compat import shard_map
+
+    r = np.random.default_rng(5)
+    k, n = 52, 16        # 26 packed rows: not divisible by tp=4
+    codes = jnp.asarray(r.integers(-8, 8, (k, n)), jnp.int8)
+    p = QLinear(pack_int4(codes, axis=0),
+                jnp.asarray(r.uniform(0.01, 0.1, (1, n)), jnp.float32),
+                T.Scale(jnp.ones((k,), jnp.float32)), act_bits=0, w_bits=4,
+                d_in=k)
+    x = jnp.asarray(r.standard_normal((3, k)), jnp.float32)
+    want = dense(p, x)
+
+    def body(xl, pl):
+        return dense_tp(pl, xl, "model")
+
+    pl_specs = QLinear(P(None, None), P(None, None), T.Scale(P()),
+                       act_bits=0, w_bits=4, d_in=k)
+    got = shard_map(body, mesh=tp_mesh,
+                    in_specs=(P(None, "model"), pl_specs),
+                    out_specs=P(None, None), check_vma=False)(x, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- subprocess (any host)
+
+@pytest.mark.slow
+def test_tp_kernels_subprocess():
+    """Same coverage on a forced-host mesh so plain tier-1 runs it."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax.numpy as jnp
+        from repro.core.quantizers import pack_int4
+        from repro.distributed.compat import make_mesh
+        from repro.kernels import ops
+        from repro.kernels.quant_matmul_w4 import quant_matmul_w4
+        r = np.random.default_rng(0)
+        m, k, n = 5, 64, 48
+        qx = jnp.asarray(r.integers(-128, 128, (m, k)), jnp.int8)
+        qw = jnp.asarray(r.integers(-8, 8, (k, n)), jnp.int8)
+        sx = jnp.asarray(r.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+        zpx = jnp.asarray(r.integers(-8, 8, (m, 1)), jnp.float32)
+        sw = jnp.asarray(r.uniform(0.01, 0.1, (1, n)), jnp.float32)
+        qwp = pack_int4(qw, axis=0)
+        mesh = make_mesh((4,), ("model",))
+        want = quant_matmul_w4(qx, sx, zpx, qwp, sw, interpret=True)
+        for fn in (ops.qmatmul_w4_tp, ops.qgemv_w4_tp):
+            got = fn(qx, sx, zpx, qwp, sw, mesh=mesh, block_k=16)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+        print("tp-kernels-ok")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300,
+                       env={**os.environ, "PYTHONPATH": os.path.abspath(SRC)})
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "tp-kernels-ok" in r.stdout
