@@ -4,13 +4,20 @@ weights (int8 slot KV cache for the quantized rows). Emits the usual CSV
 rows plus a JSON artifact (results/serve_bench.json) with TTFT, tok/s,
 and slot-occupancy per variant.
 
+Paged-vs-slot rows (``kv_paged_50`` / ``kv_paged_100``): the same
+workload through the slot cache and the paged pool at ~50% and ~100%
+mean sequence occupancy — tok/s, TTFT, and resident KV bytes (allocated
+pages vs the slot cache's flat ``n_slots × max_len`` reservation), with
+a token-identity check between the two engines.
+
 With >= 4 local devices (XLA_FLAGS=--xla_force_host_platform_device_count
 on CPU) it also serves the int4-packed variant tensor-parallel — a tp=1
 vs tp=4 pair on an MHA smoke config, token-identity checked row-to-row.
 
 On CPU the absolute tok/s is a correctness-path number (interpret-mode
-kernels, smoke model); the interesting readouts are the relative weight
-bytes and the scheduler metrics (occupancy, queue drain, TTFT spread).
+kernels, smoke model); the interesting readouts are the relative weight /
+resident-KV bytes and the scheduler metrics (occupancy, queue drain,
+TTFT spread).
 """
 from __future__ import annotations
 
@@ -70,6 +77,55 @@ def _tp_rows(rows, n_requests, n_slots, gen) -> None:
     emit("serve_tp4_token_identity", 0.0, f"identical={identical}")
 
 
+def _paged_rows(rows, n_requests: int, n_slots: int) -> None:
+    """Slot-vs-paged engine over the same model and workload, at ~50% and
+    ~100% mean sequence occupancy of max_len (the paged win is resident
+    bytes tracking true lengths; at 100% the two converge)."""
+    import numpy as np
+
+    from repro.data import request_workload
+    from repro.launch.engine import ServeEngine
+    from repro.launch.serve import build_served_model
+
+    cfg, model, params, _ = build_served_model(
+        "catlm_60m", "cat", 8, 8, 8, smoke=True, seed=0)
+    gen, max_len = 8, 48
+    for tag, lengths in (("50", (8, 16, 24)), ("100", (40,))):
+        reqs = request_workload(cfg, n_requests, gen=gen, lengths=lengths,
+                                seed=0)
+        slot = ServeEngine(model, params, n_slots=n_slots, max_len=max_len)
+        slot_res = slot.run(reqs)
+        ss = slot.summary()
+        paged = ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
+                            paged=True, page_size=8, prefill_chunk=16)
+        paged_res = paged.run(reqs)
+        ps = paged.summary()
+        identical = all((slot_res[r["rid"]].tokens
+                         == paged_res[r["rid"]].tokens).all() for r in reqs)
+        ratio = ps["resident_kv_bytes_mean"] / ss["kv_capacity_bytes"]
+        mean_seq = float(np.mean([len(r["tokens"]) + gen for r in reqs]))
+        rows[f"kv_paged_{tag}"] = {
+            "mean_seq_occupancy": mean_seq / max_len,
+            "slot_kv_bytes": ss["kv_capacity_bytes"],
+            "paged_resident_kv_bytes_mean": ps["resident_kv_bytes_mean"],
+            "paged_resident_kv_bytes_peak": ps["resident_kv_bytes_peak"],
+            "paged_over_slot_kv_bytes": ratio,
+            "page_size": ps["page_size"],
+            "prefill_chunk": ps["prefill_chunk"],
+            "slot_tok_per_s": ss["tok_per_s"],
+            "paged_tok_per_s": ps["tok_per_s"],
+            "slot_ttft_s_mean": ss["ttft_s_mean"],
+            "paged_ttft_s_mean": ps["ttft_s_mean"],
+            "token_identical": bool(identical),
+            "n_requests": n_requests, "n_slots": n_slots,
+            "max_len": max_len,
+        }
+        emit(f"serve_kv_paged_{tag}", ps["wall_s"] * 1e6,
+             f"resident_ratio={ratio:.2f} "
+             f"tok_per_s={ps['tok_per_s']:.1f} "
+             f"identical={identical}")
+
+
 def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
          out_path: str = "results/serve_bench.json") -> None:
     rows = {}
@@ -101,6 +157,7 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
     if rows.get("int8") and rows.get("int4_packed"):
         r = rows["int4_packed"]["weight_bytes"] / rows["int8"]["weight_bytes"]
         emit("serve_w4_vs_w8_weight_bytes", 0.0, f"ratio={r:.2f}")
+    _paged_rows(rows, n_requests, n_slots)
     _tp_rows(rows, n_requests, n_slots, gen)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:

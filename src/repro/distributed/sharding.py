@@ -21,6 +21,12 @@ Quantized serving adds two wrinkles this module owns:
 - quantized KV caches are a (codes int8, per-token scale f32) pair per
   K/V; both must shard the head axis congruently or a decode step would
   dequantize codes against the wrong slice of scales.
+- *paged* KV pools (``models.dense.init_paged_cache``) keep the same
+  5-dim leaf rank but mean (L, n_pages, page_size, KV, hd): the head
+  axis (3) still shards on ``model`` — codes and scales congruently —
+  while the page axis NEVER shards (every device holds its head slice
+  of every physical page; the host-side page table indexes pages
+  globally) and the ``page_table`` leaf replicates like ``pos``.
 
 ``tp_param_specs``/``tp_cache_specs`` emit plain PartitionSpec trees for
 ``shard_map`` (the serve engine's tensor-parallel mode); the
@@ -165,17 +171,25 @@ def cache_sharding(cache, mesh, cfg=None, shard_seq: bool = False):
     Quantized caches carry per-token scale leaves (L, B, T, KV, 1) next
     to the int8 codes; leaf *names* (k/v vs k_scale/v_scale) pin the head
     axis so scales shard exactly like their codes — the shape heuristic
-    alone would misread a scale (or a short-T cache) as an SSM state."""
+    alone would misread a scale (or a short-T cache) as an SSM state.
+
+    Paged caches (a ``page_table`` leaf next to (L, n_pages, page_size,
+    KV, hd) pools) shard heads on model only: the page axis stays whole
+    on every device (page ids are global) and the table replicates."""
     dp = dp_axes(mesh)
     ms = _model_size(mesh)
     dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    paged = isinstance(cache, dict) and "page_table" in cache
 
     def spec(path, leaf):
         shape = leaf.shape
         nd = len(shape)
         key = _last_key(path)
-        if nd == 0 or key == "pos":
+        if nd == 0 or key in ("pos", "page_table"):
             return NamedSharding(mesh, P(*([None] * nd)))
+        if paged and nd == 5:
+            hspec = "model" if shape[3] % ms == 0 else None
+            return NamedSharding(mesh, P(None, None, None, hspec, None))
         if nd == 5:  # (L, B, T, KV, hd) kv-cache or (L, B, H, dk, dv) state
             batch_ok = dp and shape[1] % dp_size == 0
             if key in _KV_KEYS or key in _KV_SCALE_KEYS:
@@ -327,18 +341,27 @@ def tp_cache_specs(cache, mesh, axis: str = "model",
     AND their per-token scales shard the head axis congruently when the
     head count divides; ``pos`` and anything non-divisible replicate.
     ``dp_axis`` additionally shards the slot/batch axis when it divides
-    (the engine's batched decode step; prefill is batch-1, replicated)."""
+    (the engine's batched decode step; prefill is batch-1, replicated).
+
+    Paged pools ride the same rule: axis 3 is the head axis for both the
+    slot layout (L, B, T, KV, hd) and the page layout (L, n_pages,
+    page_size, KV, hd), so codes/scales shard congruently either way —
+    but pass ``dp_axis=None`` for paged caches (the page axis must stay
+    whole; the engine enforces tp-only meshes for paged serving) and the
+    ``page_table`` replicates alongside ``pos``."""
     tp = mesh.shape[axis]
     dp = mesh.shape[dp_axis] if dp_axis else 1
+    paged = isinstance(cache, dict) and "page_table" in cache
 
     def walk(path, leaf):
         nd = len(leaf.shape)
         key = _last_key(path)
-        if key == "pos" or nd < 5:
+        if key in ("pos", "page_table") or nd < 5:
             return P(*([None] * nd))
         heads = leaf.shape[3]
         hspec = axis if heads % tp == 0 else None
-        bspec = dp_axis if dp_axis and leaf.shape[1] % dp == 0 else None
+        bspec = dp_axis if (dp_axis and not paged
+                            and leaf.shape[1] % dp == 0) else None
         return P(None, bspec, None, hspec, None)
 
     return jax.tree_util.tree_map_with_path(

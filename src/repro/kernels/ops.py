@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from .block_matmul import block_diag_matmul
 from .dynamic_quant import dynamic_quant
 from .hadamard import hadamard_transform
+from .paged_attention import paged_attention_decode, paged_attention_fallback
 from .quant_matmul import quant_matmul
 from .quant_matmul_w4 import _GEMV_M, quant_gemv_w4, quant_matmul_w4
 
@@ -96,6 +97,23 @@ def cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
     if axis_name is not None:
         y = jax.lax.psum(y, axis_name)
     return y.reshape(*lead, qw.shape[1]).astype(x.dtype)
+
+
+def paged_attention(q, k_pages, k_scale, v_pages, v_scale, page_table,
+                    lengths, **kw):
+    """Paged decode attention from the quantized KV page pool.
+
+    Routes int8 pools to the Pallas kernel (page table + lengths ride as
+    scalar-prefetch operands driving the per-page DMA; dequant + online
+    softmax in VMEM) and fp pools — which carry no scales to stream — to
+    the jnp gather fallback. See ``kernels/paged_attention.py``.
+    """
+    if k_scale is None or v_scale is None:
+        return paged_attention_fallback(q, k_pages, k_scale, v_pages,
+                                        v_scale, page_table, lengths)
+    kw.setdefault("interpret", default_interpret())
+    return paged_attention_decode(q, k_pages, k_scale, v_pages, v_scale,
+                                  page_table, lengths, **kw)
 
 
 # ------------------------------------------------- tensor-parallel wrappers

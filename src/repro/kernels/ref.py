@@ -98,6 +98,28 @@ def quant_gemv_w4(qx: jnp.ndarray, sx: jnp.ndarray, zpx: jnp.ndarray,
     return quant_matmul_w4(qx, sx, zpx, qw_packed, sw, out_dtype=out_dtype)
 
 
+def paged_attention_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           k_scale, v_pages: jnp.ndarray, v_scale,
+                           page_table: jnp.ndarray,
+                           lengths: jnp.ndarray) -> jnp.ndarray:
+    """Paged decode-attention oracle (mirrors kernels.paged_attention).
+
+    q (B, KVH, g, hd); k/v_pages (n_pages, G, KVH, hd) int8 codes (or fp
+    when the matching scale is None); k/v_scale (n_pages, G, KVH, 1) f32;
+    page_table (B, n_ptab) int32; lengths (B,) valid kv rows per slot.
+    Gathers each slot's logical sequence, dequantizes, and runs a masked
+    f32 softmax — positions >= lengths[b] (ragged last pages, null-page
+    entries) get exactly zero weight.
+
+    Delegates to the canonical jnp gather path so the semantics live in
+    exactly one place (same pattern as ``unpack_int4`` above); the Pallas
+    kernel's online-softmax reformulation is what gets validated against
+    this."""
+    from repro.kernels.paged_attention import paged_attention_fallback
+    return paged_attention_fallback(q, k_pages, k_scale, v_pages, v_scale,
+                                    page_table, lengths)
+
+
 def block_diag_matmul(x: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
     """y = x @ Tᵀ for block-diagonal T = Diag(B_1..B_n); blocks (n, k, k).
     y[..., i, a] = Σ_b blocks[i, a, b] · x[..., i, b]."""

@@ -22,9 +22,22 @@ the causal (position >= kv position) test inside ``chunked_attention``.
 
 Decode always runs the full ``n_slots`` batch (free slots carry a dummy
 token at position 0 whose output is discarded) so the decode step compiles
-exactly once; prefill compiles once per distinct prompt length — keep the
-workload's length set small or bucket lengths upstream when compile time
-matters. See ``src/repro/launch/README.md`` for the architecture diagram.
+exactly once. Prefill compile count is tamed two ways:
+
+- **bucketing** (default, ``bucket=True``): prompts pad right to the next
+  power-of-two length and the logits slice at the true last prompt token
+  (``logits_at``), so prefill compiles O(log max_len) times instead of
+  once per distinct prompt length;
+- **chunked prefill** (``prefill_chunk=C``, paged mode): the prompt feeds
+  through in fixed C-token chunks at successive cache offsets — ONE
+  prefill compile total, independent of the length distribution.
+
+``paged=True`` swaps the slot-contiguous cache for a **paged KV pool**
+(``repro.launch.paged``): fixed-size pages allocated lazily as sequences
+grow, per-slot page tables gathered on device, token-identical output to
+the slot cache (the gathered logical view is bitwise the same tensor).
+See ``src/repro/launch/README.md`` for diagrams and the pool sizing
+formula.
 """
 from __future__ import annotations
 
@@ -87,15 +100,31 @@ def _take_slot(cache, slot):
 
 
 # Donating the shared cache lets XLA write the slot rows in place on
-# backends with buffer donation (TPU); CPU falls back to a copy. A full
-# take/put round trip per admission is still O(cache) HBM traffic — if
-# admission ever dominates, prefill directly into the shared cache via
-# the per-slot _write_kv machinery instead.
+# backends with buffer donation (TPU); CPU falls back to a copy.
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _put_slot(cache, part, slot):
     return jax.tree.map(
         lambda a, p: jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1),
         cache, part)
+
+
+# Single-device admissions run take -> prefill -> put as ONE jitted
+# program: the slot's rows are sliced, prefilled, and written back without
+# the per-slot part ever surfacing as separate host-boundary buffers
+# between three dispatches (the old take/prefill/put ping-pong). The
+# shared cache is donated so XLA can update the slot rows in place.
+# ``prefill_fn`` is static (one compile per model × token shape).
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def _prefill_slot_fused(prefill_fn, params, cache, tokens, slot, logits_at):
+    part = jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache)
+    logits, part = prefill_fn(params, tokens, dict(part, pos=jnp.int32(0)),
+                              logits_at=logits_at)
+    part.pop("pos")
+    cache = jax.tree.map(
+        lambda a, p: jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1),
+        cache, part)
+    return logits, cache
 
 
 # ------------------------------------------------------------------ engine
@@ -113,7 +142,10 @@ class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 256, eos_id: Optional[int] = None,
                  mesh=None, tp_axis: str = "model",
-                 tp_mode: str = "gather", tp_kernels: bool = False):
+                 tp_mode: str = "gather", tp_kernels: bool = False,
+                 paged: bool = False, page_size: int = 16,
+                 prefill_chunk: int = 0, n_pages: int = 0,
+                 bucket: bool = True, paged_kernel: bool = False):
         family = getattr(model.cfg, "family", "dense")
         if family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
@@ -122,9 +154,48 @@ class ServeEngine:
                 f"{family!r}")
         self.model, self.params = model, params
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
-        cache = model.init_cache(n_slots, max_len)
+        self.paged, self.bucket = paged, bucket
+        self.prefill_chunk, self.paged_kernel = prefill_chunk, paged_kernel
+        if paged:
+            from repro.launch.paged import PagePool, SlotPageTables
+            from repro.models.layers import KV_QUANT_GROUP
+            if getattr(model, "init_paged_cache", None) is None:
+                raise NotImplementedError(
+                    f"family {family!r} has no paged KV cache")
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if prefill_chunk < 0:
+                raise ValueError(
+                    f"prefill_chunk must be >= 0, got {prefill_chunk}")
+            if model.cfg.kv_quant_bits and page_size % KV_QUANT_GROUP:
+                raise ValueError(
+                    f"page_size={page_size} must be a multiple of the KV "
+                    f"quant scale group ({KV_QUANT_GROUP})")
+            if prefill_chunk and prefill_chunk % page_size:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be a multiple of "
+                    f"page_size={page_size} (chunks write whole pages)")
+            # logical rows per slot, rounded up to whole pages
+            self._kv_len = -(-max_len // page_size) * page_size
+            n_ptab = self._kv_len // page_size
+            n_pages = n_pages or 1 + n_slots * n_ptab  # worst case + null
+            self.pool = PagePool(n_pages, page_size)
+            self.tables = SlotPageTables(self.pool, n_slots, n_ptab)
+            cache = model.init_paged_cache(n_pages, page_size)
+            self._cache = dict(cache)
+        else:
+            if prefill_chunk:
+                raise ValueError("prefill_chunk needs paged=True (the slot "
+                                 "cache keeps whole-prompt prefill; use "
+                                 "bucket=True to bound its compile count)")
+            if paged_kernel:
+                raise ValueError("paged_kernel needs paged=True")
+            self._kv_len = max_len
+            cache = model.init_cache(n_slots, max_len)
+            self._cache = {k: v for k, v in cache.items() if k != "pos"}
         self.quantized_kv = "k_scale" in cache
-        self._cache = {k: v for k, v in cache.items() if k != "pos"}
+        self._page_bytes = (sum(v.nbytes for v in self._cache.values())
+                            // n_pages if paged else 0)
         self._pos = np.zeros((n_slots,), np.int32)     # per-slot positions
         self._free = list(range(n_slots))
         self._queue: deque[Request] = deque()
@@ -132,6 +203,16 @@ class ServeEngine:
         self.mesh = mesh
         if mesh is None:
             self._prefill, self._decode = jitted_model_fns(model)
+            if paged:
+                # paged prefill/decode round-trip the ENTIRE global pool
+                # (not a batch-1 slot part), so donate the cache arg —
+                # in-place pool updates on donation-capable backends,
+                # mirroring what _prefill_slot_fused does for slots
+                self._prefill = jax.jit(model.prefill, donate_argnums=(2,))
+                dec = (lambda p, t, c: model.decode(p, t, c,
+                                                    paged_kernel=True)
+                       ) if paged_kernel else model.decode
+                self._decode = jax.jit(dec, donate_argnums=(2,))
         else:
             self._init_mesh_fns(mesh, tp_axis, tp_mode, tp_kernels)
         self.step_count = 0
@@ -139,6 +220,7 @@ class ServeEngine:
         self.events: list[tuple] = []   # ("admit"|"retire", rid, slot, step)
         self.results: dict[int, RequestResult] = {}
         self.metrics = {"queue_depth": [], "occupancy": [],
+                        "resident_kv_bytes": [],
                         "generated_tokens": 0, "decode_steps": 0}
 
     # -------------------------------------------------------- mesh serving
@@ -182,14 +264,25 @@ class ServeEngine:
                         if a in mesh.axis_names
                         and self.n_slots % mesh.shape[a] == 0
                         and mesh.shape[a] > 1), None)
+        if self.paged and dp_axis is not None:
+            raise NotImplementedError(
+                "paged mesh serving is tensor-parallel only: the page pool "
+                "is a global (not per-slot) allocation, so its writes "
+                "cannot shard over a data axis — use a (1, tp) mesh")
 
         pspecs = shlib.tp_param_specs(self.params, mesh, axis=tp_axis,
                                       cfg=cfg, row_mode=tp_mode)
         dec_cspecs = shlib.tp_cache_specs(self._cache, mesh, axis=tp_axis,
                                           dp_axis=dp_axis)
-        part_shapes = jax.eval_shape(
-            lambda c: jax.tree.map(lambda a: a[:, :1], c), self._cache)
-        pre_cspecs = shlib.tp_cache_specs(part_shapes, mesh, axis=tp_axis)
+        if self.paged:
+            # prefill sees the same global pool as decode (only the page
+            # table narrows to the admitted slot's row)
+            pre_cspecs = dec_cspecs
+        else:
+            part_shapes = jax.eval_shape(
+                lambda c: jax.tree.map(lambda a: a[:, :1], c), self._cache)
+            pre_cspecs = shlib.tp_cache_specs(part_shapes, mesh,
+                                              axis=tp_axis)
         self.params = jax.device_put(self.params, shlib.named(pspecs, mesh))
         self._cache = jax.device_put(self._cache,
                                      shlib.named(dec_cspecs, mesh))
@@ -197,24 +290,36 @@ class ServeEngine:
         # the (B,) per-slot position vector shards with the slot axis
         pos_spec = P(dp_axis) if dp_axis else P()
         tp_kw = dict(tp_axis=tp_axis, tp_mode=tp_mode, tp_kernels=tp_kernels)
+        if self.paged:
+            # page tables replicate (every shard gathers/scatters its own
+            # head slice of the same physical pages)
+            pt_spec = {"page_table": P(None, None)}
+            pre_extra = dict(pt_spec, pos=P())
+            dec_extra = dict(pt_spec, pos=pos_spec)
+        else:
+            pre_extra, dec_extra = {"pos": P()}, {"pos": pos_spec}
         model = self.model
+        pk = self.paged_kernel
 
-        def pre(p, t, c):
-            return model.prefill(p, t, c, **tp_kw)
+        def pre(p, t, c, la):
+            return model.prefill(p, t, c, logits_at=la, **tp_kw)
 
         def dec(p, t, c):
+            if pk:
+                return model.decode(p, t, c, paged_kernel=True, **tp_kw)
             return model.decode(p, t, c, **tp_kw)
 
         self._prefill = jax.jit(shard_map(
             pre, mesh=mesh,
-            in_specs=(pspecs, P(None, None), dict(pre_cspecs, pos=P())),
-            out_specs=(P(None, None, None), dict(pre_cspecs, pos=P())),
+            in_specs=(pspecs, P(None, None), dict(pre_cspecs, **pre_extra),
+                      P()),
+            out_specs=(P(None, None, None), dict(pre_cspecs, **pre_extra)),
             check_vma=False))
         self._decode = jax.jit(shard_map(
             dec, mesh=mesh,
-            in_specs=(pspecs, tok_spec, dict(dec_cspecs, pos=pos_spec)),
+            in_specs=(pspecs, tok_spec, dict(dec_cspecs, **dec_extra)),
             out_specs=(P(dp_axis, None, None),
-                       dict(dec_cspecs, pos=pos_spec)),
+                       dict(dec_cspecs, **dec_extra)),
             check_vma=False))
 
     # ------------------------------------------------------------- intake
@@ -231,6 +336,13 @@ class ServeEngine:
             raise ValueError(
                 f"prompt({len(prompt)}) + max_new_tokens({max_new_tokens}) "
                 f"exceeds max_len={self.max_len}")
+        if self.paged:
+            need = self.tables.pages_for(len(prompt) + max_new_tokens)
+            if need > self.pool.n_pages - 1:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.pool.n_pages - 1} allocatable (raise n_pages "
+                    f"or max_len/page_size)")
         if rid is None:
             rid = self._next_rid
         elif (rid in self.results
@@ -244,17 +356,88 @@ class ServeEngine:
 
     # ------------------------------------------------------ slot lifecycle
 
+    def _bucketed(self, prompt: np.ndarray):
+        """Right-pad a prompt to its power-of-two bucket (compile-count
+        discipline: O(log max_len) prefill shapes instead of one per
+        distinct length). Returns (padded tokens, logits row index).
+        Padded rows write garbage k/v past the prompt — causally masked,
+        then overwritten by decode before they are ever attendable."""
+        p = len(prompt)
+        if not self.bucket:
+            return prompt, p - 1
+        width = max(8, 1 << (p - 1).bit_length())
+        width = min(width, self._kv_len if self.paged else self.max_len)
+        if width <= p:
+            return prompt, p - 1
+        return np.pad(prompt, (0, width - p)), p - 1
+
+    def _prefill_paged(self, req: Request, slot: int):
+        """Prefill into the slot's freshly-allocated pages: one bucketed
+        call, or fixed-size chunks at successive offsets (ONE compile
+        total) when ``prefill_chunk`` is set."""
+        p = len(req.prompt)
+        row = jnp.asarray(self.tables.table[slot:slot + 1])
+        chunk = self.prefill_chunk
+        if not chunk:
+            toks, last = self._bucketed(req.prompt)
+            spans = [(toks, 0, last)]
+        else:
+            spans = []
+            for off in range(0, p, chunk):
+                toks = np.zeros((chunk,), np.int32)
+                n = min(chunk, p - off)
+                toks[:n] = req.prompt[off:off + n]
+                spans.append((toks, off, int(np.clip(p - 1 - off, 0,
+                                                     chunk - 1))))
+        logits = None
+        for toks, off, last in spans:
+            cache = dict(self._cache, page_table=row, pos=jnp.int32(off))
+            if self.mesh is None:
+                logits, cache = self._prefill(self.params, toks[None], cache,
+                                              logits_at=jnp.int32(last))
+            else:
+                logits, cache = self._prefill(self.params, toks[None], cache,
+                                              jnp.int32(last))
+            cache.pop("pos")
+            # rebind: the input row buffer was donated with the cache
+            row = cache.pop("page_table")
+            self._cache = cache
+        return logits
+
+    def _prefill_slot(self, req: Request, slot: int):
+        """Slot-cache prefill: fused take->prefill->put in one dispatch
+        (single device) or explicit take/put around the shard_map'd
+        forward (mesh)."""
+        toks, last = self._bucketed(req.prompt)
+        if self.mesh is None:
+            logits, self._cache = _prefill_slot_fused(
+                self.model.prefill, self.params, self._cache, toks[None],
+                np.int32(slot), jnp.int32(last))
+            return logits
+        part = dict(_take_slot(self._cache, np.int32(slot)),
+                    pos=jnp.int32(0))
+        logits, part = self._prefill(self.params, toks[None], part,
+                                     jnp.int32(last))
+        part.pop("pos")
+        self._cache = _put_slot(self._cache, part, np.int32(slot))
+        return logits
+
     def _admit(self) -> None:
         while self._free and self._queue:
+            head = self._queue[0]
+            if self.paged and not self.tables.can_admit(
+                    len(head.prompt) + head.max_new_tokens):
+                break                       # head-of-line wait (stays FIFO)
             slot = min(self._free)          # deterministic: lowest free slot
             self._free.remove(slot)
             req = self._queue.popleft()
             p = len(req.prompt)
-            part = dict(_take_slot(self._cache, np.int32(slot)),
-                        pos=jnp.int32(0))
-            logits, part = self._prefill(self.params, req.prompt[None], part)
-            part.pop("pos")
-            self._cache = _put_slot(self._cache, part, np.int32(slot))
+            if self.paged:
+                self.tables.admit(slot, p,
+                                  budget_tokens=p + req.max_new_tokens)
+                logits = self._prefill_paged(req, slot)
+            else:
+                logits = self._prefill_slot(req, slot)
             self._pos[slot] = p
             tok = int(np.argmax(np.asarray(logits[0, -1])))
             rec = _Active(req, slot, [tok], self.step_count,
@@ -286,9 +469,19 @@ class ServeEngine:
         self.events.append(("retire", rid, rec.slot, self.step_count))
         self._active.pop(rec.slot, None)
         self._pos[rec.slot] = 0       # free slots idle at position 0
+        if self.paged:
+            self.tables.release(rec.slot)
         self._free.append(rec.slot)
 
     # --------------------------------------------------------------- step
+
+    def resident_kv_bytes(self) -> int:
+        """KV bytes actually reserved for live sequences: allocated pages
+        (paged) or the whole slot allocation (contiguous — every slot
+        reserves max_len rows up front regardless of use)."""
+        if self.paged:
+            return self.pool.in_use * self._page_bytes
+        return sum(v.nbytes for v in self._cache.values())
 
     def step(self) -> dict:
         """One admit + batched-decode + retire cycle; returns step stats."""
@@ -300,10 +493,19 @@ class ServeEngine:
             toks = np.zeros((self.n_slots, 1), np.int32)
             for slot, rec in self._active.items():
                 toks[slot, 0] = rec.generated[-1]
+                if self.paged:   # a new page the instant pos crosses one
+                    self.tables.ensure(slot, int(self._pos[slot]))
+        # sampled after this step's page growth so the mean/peak include
+        # the pages the decode write below is about to land in
+        self.metrics["resident_kv_bytes"].append(self.resident_kv_bytes())
+        if self._active:
             cache = dict(self._cache, pos=jnp.asarray(self._pos))
+            if self.paged:
+                cache["page_table"] = jnp.asarray(self.tables.table)
             logits, cache = self._decode(self.params, jnp.asarray(toks),
                                          cache)
             cache.pop("pos")
+            cache.pop("page_table", None)
             self._cache = cache
             logits = np.asarray(logits)
             self.metrics["decode_steps"] += 1
@@ -353,6 +555,16 @@ class ServeEngine:
             "queue_depth_max": (int(np.max(m["queue_depth"]))
                                 if m["queue_depth"] else 0),
             "quantized_kv": self.quantized_kv,
+            "paged": self.paged,
+            "kv_capacity_bytes": sum(v.nbytes for v in self._cache.values()),
+            "resident_kv_bytes_mean": (float(np.mean(
+                m["resident_kv_bytes"])) if m["resident_kv_bytes"] else 0),
+            "resident_kv_bytes_peak": (int(np.max(m["resident_kv_bytes"]))
+                                       if m["resident_kv_bytes"] else 0),
+            **({"page_size": self.pool.page_size,
+                "n_pages": self.pool.n_pages,
+                "pages_peak": self.pool.peak_in_use,
+                "prefill_chunk": self.prefill_chunk} if self.paged else {}),
             "mesh": (dict(self.mesh.shape) if self.mesh is not None
                      else None),
         }

@@ -1,0 +1,155 @@
+"""Paged KV-cache bookkeeping: a fixed-size-page allocator + per-slot
+page tables (all host-side; the device-side page *pool* arrays live in
+the model cache, see ``models.dense.init_paged_cache``).
+
+Layout contract (shared with ``models.layers`` and
+``kernels.paged_attention``):
+
+- The pool holds ``n_pages`` pages of ``page_size`` token rows each,
+  per layer: leaves are (L, n_pages, page_size, KV, hd) codes plus
+  congruent per-token scale leaves when the cache is quantized.
+- **Page 0 is the null page** — never allocated. Page-table entries
+  default to 0, so dummy writes (free decode slots, padded prefill rows
+  past a slot's table) land there inertly, and dummy reads are causally
+  masked. Every *owned* page belongs to exactly one slot, so real
+  scatter writes never collide.
+- Logical position ``p`` of a slot lives at row ``p % page_size`` of
+  physical page ``table[slot, p // page_size]``.
+
+Pages are fixed-size, so "fragmentation" cannot strand capacity: any
+free page satisfies any allocation (``tests/test_paged_cache.py`` pins
+this as an allocator property). Allocation order is deterministic
+(lowest free page id first) so paged engine runs are reproducible.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PagePool:
+    """Host-side allocator over a fixed set of page ids [1, n_pages).
+
+    Invariants (property-tested): a page is never handed out twice
+    without an intervening free, frees are exactly-once, page 0 is never
+    allocated, and ``available + in_use == n_pages - 1`` at all times.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (page 0 is the reserved "
+                             f"null page), got n_pages={n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages, self.page_size = n_pages, page_size
+        self._free: List[int] = list(range(1, n_pages))  # heap, low id first
+        heapq.heapify(self._free)
+        self._in_use: set = set()
+        self.peak_in_use = 0
+        self.allocs = 0
+        self.frees = 0
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._in_use)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"page pool exhausted ({self.n_pages - 1} allocatable "
+                f"pages, all in use)")
+        page = heapq.heappop(self._free)
+        self._in_use.add(page)
+        self.allocs += 1
+        self.peak_in_use = max(self.peak_in_use, len(self._in_use))
+        return page
+
+    def free(self, page: int) -> None:
+        if page not in self._in_use:
+            raise RuntimeError(f"freeing page {page} that is not allocated "
+                               f"(double free or foreign id)")
+        self._in_use.remove(page)
+        heapq.heappush(self._free, page)
+        self.frees += 1
+
+
+class SlotPageTables:
+    """Per-slot page tables over a shared ``PagePool``.
+
+    ``table`` is the (n_slots, n_ptab) int32 host array the engine ships
+    to the device each step (row per slot, ``NULL_PAGE`` for unallocated
+    tail entries). Pages are allocated lazily: the prompt's pages at
+    admission, then one page at a time as decode crosses page
+    boundaries — resident KV bytes track actual sequence lengths instead
+    of the slot-cache's ``n_slots × max_len`` worst case.
+
+    Admission additionally *reserves* the request's worst-case page count
+    (prompt + decode budget) without allocating it: ``can_admit`` only
+    says yes when unreserved capacity covers the whole budget, so an
+    admitted request can never strand mid-decode on an exhausted pool
+    (there is no preemption — a stranded slot would deadlock the batch).
+    """
+
+    def __init__(self, pool: PagePool, n_slots: int, n_ptab: int):
+        self.pool = pool
+        self.n_ptab = n_ptab
+        self.table = np.full((n_slots, n_ptab), NULL_PAGE, np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+        self._reserved = [0] * n_slots
+
+    def n_owned(self, slot: int) -> int:
+        return len(self._owned[slot])
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.pool.page_size)
+
+    @property
+    def reserved_unallocated(self) -> int:
+        """Pages promised to admitted slots but not yet allocated."""
+        return sum(max(0, r - len(o))
+                   for r, o in zip(self._reserved, self._owned))
+
+    def can_admit(self, budget_tokens: int) -> bool:
+        return (self.pool.available - self.reserved_unallocated
+                >= self.pages_for(budget_tokens))
+
+    def admit(self, slot: int, n_tokens: int,
+              budget_tokens: int = 0) -> None:
+        """Allocate the pages covering logical rows [0, n_tokens) and
+        reserve enough for ``budget_tokens`` total."""
+        assert not self._owned[slot], f"slot {slot} already holds pages"
+        self._reserved[slot] = self.pages_for(max(budget_tokens, n_tokens))
+        for i in range(self.pages_for(n_tokens)):
+            page = self.pool.alloc()
+            self._owned[slot].append(page)
+            self.table[slot, i] = page
+
+    def ensure(self, slot: int, pos: int) -> None:
+        """Grow the slot's table so a write at logical row ``pos`` has a
+        real page (decode calls this right before each step). Growth
+        within the admission reservation cannot fail."""
+        idx = pos // self.pool.page_size
+        if idx >= self.n_ptab:
+            raise RuntimeError(f"slot {slot} position {pos} exceeds the "
+                               f"table ({self.n_ptab} pages)")
+        while self.n_owned(slot) <= idx:
+            page = self.pool.alloc()
+            self._owned[slot].append(page)
+            self.table[slot, self.n_owned(slot) - 1] = page
+
+    def release(self, slot: int) -> None:
+        """Free all of a slot's pages (exactly once), drop its
+        reservation, and null its row."""
+        for page in self._owned[slot]:
+            self.pool.free(page)
+        self._owned[slot] = []
+        self._reserved[slot] = 0
+        self.table[slot] = NULL_PAGE

@@ -106,7 +106,9 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     a_bits: int = 4, smoke: bool = True, seed: int = 0,
                     kv_bits: int = 8, n_slots: int = 0,
                     n_requests: int = 0, mixed: bool = False,
-                    mesh=None, cfg_overrides: Optional[dict] = None):
+                    mesh=None, cfg_overrides: Optional[dict] = None,
+                    paged: bool = False, page_size: int = 16,
+                    prefill_chunk: int = 0, max_len: int = 0):
     """Quantize then serve a workload through the engine.
 
     Default (``mixed=False``): ``batch`` uniform-length requests so
@@ -114,7 +116,10 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     seeded mixed-prompt-length workload instead (per-request sequences in
     ``results``). ``n_slots`` defaults to ``batch`` (0 = auto). ``mesh``
     serves tensor-parallel (sharded int4 weights + sharded KV cache,
-    token-identical to single-device — see launch/README.md)."""
+    token-identical to single-device — see launch/README.md). ``paged``
+    swaps the slot cache for the paged KV pool (``page_size`` tokens per
+    page; ``prefill_chunk`` feeds prompts through in fixed chunks so
+    prefill compiles once) — token-identical to the slot engine."""
     cfg, model, params, mem = build_served_model(
         arch, transform, w_bits, a_bits, kv_bits, smoke, seed,
         cfg_overrides=cfg_overrides)
@@ -129,7 +134,9 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     for i in range(n_requests)]
     max_prompt = max(len(r["tokens"]) for r in requests)
     engine = ServeEngine(model, params, n_slots=n_slots or batch,
-                         max_len=max_prompt + gen + 8, mesh=mesh)
+                         max_len=max_len or max_prompt + gen + 8, mesh=mesh,
+                         paged=paged, page_size=page_size,
+                         prefill_chunk=prefill_chunk)
     results = engine.run(requests)
     summary = engine.summary()
     out = {
@@ -168,22 +175,43 @@ def main() -> None:
     ap.add_argument("--mesh", default="",
                     help="dp,tp device mesh (axes data,model) for "
                          "tensor-parallel serving, e.g. --mesh 1,4")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool (lazy per-page "
+                         "allocation) instead of the slot cache")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (must be a multiple of the "
+                         "KV quant scale group; needs --paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="feed prompts through prefill in fixed chunks of "
+                         "this many tokens — ONE prefill compile total "
+                         "(multiple of --page-size; needs --paged)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
+    if (args.page_size != 16 or args.prefill_chunk) and not args.paged:
+        ap.error("--page-size/--prefill-chunk need --paged")
     out = serve_benchmark(arch=args.arch, batch=args.batch,
                           prompt_len=args.prompt_len, gen=args.gen,
                           transform=args.transform, w_bits=args.w_bits,
                           a_bits=args.a_bits, smoke=not args.full_config,
                           kv_bits=args.kv_bits, n_requests=args.requests,
-                          mixed=args.mixed, mesh=parse_mesh(args.mesh))
+                          mixed=args.mixed, mesh=parse_mesh(args.mesh),
+                          paged=args.paged, page_size=args.page_size,
+                          prefill_chunk=args.prefill_chunk)
     eng = out["engine"]
     mesh_note = (f", mesh={eng['mesh']}" if eng.get("mesh") else "")
+    paged_note = ""
+    if eng.get("paged"):
+        paged_note = (f", paged[{eng['page_size']}t/page, "
+                      f"{eng['resident_kv_bytes_mean'] / 2**10:.0f}KiB "
+                      f"resident vs {eng['kv_capacity_bytes'] / 2**10:.0f}"
+                      f"KiB slot-equivalent]")
     print(f"{out['arch']} [{out['transform']}]: "
           f"{out['tok_per_s']:.1f} tok/s ({out['wall_s']:.2f}s wall) | "
           f"{eng['n_requests']} reqs on {eng['n_slots']} slots, "
           f"ttft {eng['ttft_s_mean'] * 1e3:.0f}ms, "
           f"occupancy {eng['occupancy_mean']:.2f}, "
-          f"kv={'int8' if eng['quantized_kv'] else 'fp'}{mesh_note}")
+          f"kv={'int8' if eng['quantized_kv'] else 'fp'}"
+          f"{paged_note}{mesh_note}")
     if out.get("qlinear_layers"):
         kind = "int4-packed" if out["packed_int4"] else "int8"
         print(f"  weights: {out['weight_bytes'] / 2**20:.2f} MiB across "

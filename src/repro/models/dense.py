@@ -91,9 +91,20 @@ def init(cfg, rng) -> dict:
 
 def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
                 taps=None, layer_idx=None, tp_axis=None,
-                tp_mode: str = "gather", tp_kernels=False):
+                tp_mode: str = "gather", tp_kernels=False,
+                page_table=None, paged_kernel: bool = False):
     """cache_sl: per-layer cache slices dict ({"k","v"[,"k_scale","v_scale"]})
     or None. Returns (x, new_cache_sl, aux).
+
+    With ``page_table`` (B, n_ptab) the cache slices are *page pools*
+    ((n_pages, page_size, KV, hd) per layer, plus congruent per-token
+    scale pools when quantized): k/v writes scatter to the physical rows
+    the table maps [pos, pos+S) to, and attention reads the gathered
+    logical view — identical content and shape to the contiguous slot
+    cache, so decoded tokens stay bitwise the same. ``paged_kernel``
+    additionally routes single-token (decode) attention on quantized
+    pools through the Pallas paged-attention kernel (streams int8 pages,
+    dequantizes in VMEM — rtol-level, not bitwise).
 
     With ``tp_axis`` the body runs INSIDE shard_map on a tensor-parallel
     mesh axis: wq/wk/wv/wg/wu arrive column-sharded (whole local heads /
@@ -143,7 +154,40 @@ def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
         v = fake_quant(v, kv_spec)
 
     new_cache_sl = None
-    if cache_sl is not None and quant_cache:
+    o = None
+    if cache_sl is not None and page_table is not None:
+        from repro.models.layers import (gather_pages, paged_cache_update,
+                                         paged_cache_update_quantized)
+        if quant_cache:
+            ck, cks, cv, cvs = paged_cache_update_quantized(
+                cache_sl["k"], cache_sl["k_scale"], cache_sl["v"],
+                cache_sl["v_scale"], k, v, page_table, pos,
+                cfg.kv_quant_bits)
+            new_cache_sl = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
+            if paged_kernel and s == 1 and window is None \
+                    and not cfg.attn_softcap:
+                # decode fast path: stream int8 pages, dequant in VMEM
+                # (rtol-level vs the gathered logical view, not bitwise)
+                from repro.kernels import ops
+                kvh = ck.shape[2]
+                qk = q.reshape(b, kvh, q.shape[2] // kvh, cfg.head_dim)
+                lengths = (pos if getattr(pos, "ndim", 0)
+                           else jnp.broadcast_to(pos, (b,))) + 1
+                o = ops.paged_attention(qk, ck, cks, cv, cvs, page_table,
+                                        lengths.astype(jnp.int32))
+                o = o.reshape(b, 1, -1)
+            else:
+                k_att = (gather_pages(ck, page_table),
+                         gather_pages(cks, page_table))
+                v_att = (gather_pages(cv, page_table),
+                         gather_pages(cvs, page_table))
+        else:
+            ck, cv = paged_cache_update(cache_sl["k"], cache_sl["v"], k, v,
+                                        page_table, pos)
+            new_cache_sl = {"k": ck, "v": cv}
+            k_att = gather_pages(ck, page_table).astype(cd)
+            v_att = gather_pages(cv, page_table).astype(cd)
+    elif cache_sl is not None and quant_cache:
         from repro.models.layers import cache_update_quantized
         ck, cks, cv, cvs = cache_update_quantized(
             cache_sl["k"], cache_sl["k_scale"], cache_sl["v"],
@@ -157,10 +201,11 @@ def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
     else:
         k_att, v_att = k, v
 
-    o = chunked_attention(q, k_att, v_att,
-                          q_positions=positions, causal=True, window=window,
-                          attn_softcap=cfg.attn_softcap)
-    o = o.reshape(b, s, -1)
+    if o is None:
+        o = chunked_attention(q, k_att, v_att, q_positions=positions,
+                              causal=True, window=window,
+                              attn_softcap=cfg.attn_softcap)
+        o = o.reshape(b, s, -1)
     _tap(taps, layer_idx, "o_in", o)
     attn_out = row_dense(lp["wo"], o)
     if cfg.post_norms:
@@ -198,10 +243,18 @@ def _tap(taps, layer_idx, name, x):
 
 def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
             taps=None, unroll: bool = False, tp_axis=None,
-            tp_mode: str = "gather", tp_kernels: bool = False):
+            tp_mode: str = "gather", tp_kernels: bool = False,
+            paged_kernel: bool = False):
     """-> (hidden (B, S, D), aux_loss, new_cache). ``tokens`` (B, S) int32;
     ``extra_embed`` (B, P, D) is prepended (vlm prefix); with ``cache`` the
     attention runs against the cache and writes k/v at cache['pos'].
+
+    A cache carrying a ``page_table`` leaf is *paged*: its k/v leaves are
+    page pools (L, n_pages, page_size, KV, hd) shared across slots, and
+    the table ((B, n_ptab) int32) maps each row's logical positions to
+    physical pages (see ``init_paged_cache`` / ``models.layers``).
+    ``paged_kernel`` opts decode steps into the Pallas paged-attention
+    kernel (quantized pools only; rtol-level numerics).
 
     ``tp_axis`` names a mesh axis when the forward runs inside shard_map
     with params sharded per ``distributed.sharding.tp_param_specs`` (same
@@ -227,8 +280,11 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
     flags = is_global_flags(cfg)
 
     cache_layers = None
+    page_table = None
     if cache is not None:
-        cache_layers = {k: v for k, v in cache.items() if k != "pos"}
+        page_table = cache.get("page_table")
+        cache_layers = {k: v for k, v in cache.items()
+                        if k not in ("pos", "page_table")}
 
     aux0 = jnp.zeros((), jnp.float32)
     if unroll:
@@ -241,7 +297,9 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
             x, csl, a = _layer_body(cfg, x, lp, csl, flags[i], pos,
                                     positions, taps=taps, layer_idx=i,
                                     tp_axis=tp_axis, tp_mode=tp_mode,
-                                    tp_kernels=tp_kernels)
+                                    tp_kernels=tp_kernels,
+                                    page_table=page_table,
+                                    paged_kernel=paged_kernel)
             aux = aux + a
             if csl is not None:
                 new_sl.append(csl)
@@ -258,7 +316,9 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
                 (lp, fl), csl = xs, None
             x, csl, a = _layer_body(cfg, x, lp, csl, fl, pos, positions,
                                     tp_axis=tp_axis, tp_mode=tp_mode,
-                                    tp_kernels=tp_kernels)
+                                    tp_kernels=tp_kernels,
+                                    page_table=page_table,
+                                    paged_kernel=paged_kernel)
             return (x, aux + a), csl
 
         if cfg.remat:
@@ -272,6 +332,8 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
         new_cache = None
         if cache is not None:
             new_cache = dict(ys, pos=pos + s)
+    if new_cache is not None and page_table is not None:
+        new_cache["page_table"] = page_table
 
     x = rms_norm(x, params["final_norm"])
     return x, aux, new_cache
@@ -310,10 +372,36 @@ def init_cache(cfg, batch_size: int, max_len: int) -> dict:
             "pos": jnp.int32(0)}
 
 
-def prefill(cfg, params, tokens, cache, extra_embed=None, **fwd_kw):
+def init_paged_cache(cfg, n_pages: int, page_size: int) -> dict:
+    """Global paged KV pool: (L, n_pages, page_size, KV, hd) codes (+
+    congruent per-token scale pools when quantized). No ``pos`` — page
+    tables and per-slot lengths are the caller's (engine's) bookkeeping;
+    page 0 is conventionally the never-owned null page (see
+    ``repro.launch.paged.PagePool``)."""
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    cd = _compute_dtype(cfg)
+    if cfg.kv_quant_bits:
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd)}
+
+
+def prefill(cfg, params, tokens, cache, extra_embed=None, logits_at=None,
+            **fwd_kw):
+    """Prefill logits come from the last row by default; ``logits_at``
+    (traced scalar) instead slices the row at that index — the hook that
+    lets chunked/bucketed prefill pad tokens on the right and still read
+    logits at the true last prompt token."""
     hidden, _, cache = forward(cfg, params, tokens, extra_embed=extra_embed,
                                cache=cache, **fwd_kw)
-    return logits_fn(cfg, params, hidden[:, -1:]), cache
+    if logits_at is None:
+        hidden = hidden[:, -1:]
+    else:
+        hidden = jax.lax.dynamic_slice_in_dim(hidden, logits_at, 1, axis=1)
+    return logits_fn(cfg, params, hidden), cache
 
 
 def decode(cfg, params, token, cache, **fwd_kw):

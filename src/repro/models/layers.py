@@ -203,3 +203,79 @@ def cache_update_quantized(ck, cks, cv, cvs, k, v, pos, bits: int):
     vq, vs = quantize_kv(v, bits)
     return (_write_kv(ck, kq, pos), _write_kv(cks, ks, pos),
             _write_kv(cv, vq, pos), _write_kv(cvs, vs, pos))
+
+
+# ----------------------------------------------------------- paged KV cache
+
+# Sequence-axis granularity of the per-token KV quant scales. The serve
+# CLI validates page_size % KV_QUANT_GROUP == 0 so a page never splits a
+# scale group (today scales are per-token, so the group is 1; a grouped-
+# scale quantizer must bump this in lockstep).
+KV_QUANT_GROUP = 1
+
+
+def _paged_indices(page_table, pos, b, s, page_size):
+    """Physical (page, row) targets for writing (B, S) tokens starting at
+    ``pos`` (scalar or (B,)) into a paged pool.
+
+    Logical position p lives at row ``p % page_size`` of physical page
+    ``page_table[b, p // page_size]``. Positions past the table (padded
+    prefill chunks / bucket rows) and table entries that are 0 both land
+    on the reserved null page 0 — never owned by a request, so the write
+    is inert (and the garbage rows are causally masked on read anyway).
+    Returns flat ((B*S,) page ids, (B*S,) rows)."""
+    if getattr(pos, "ndim", 0) == 0:
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    logical = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B,S)
+    n_ptab = page_table.shape[1]
+    pidx = logical // page_size
+    valid = pidx < n_ptab
+    pids = jnp.take_along_axis(page_table, jnp.minimum(pidx, n_ptab - 1),
+                               axis=1)
+    pids = jnp.where(valid, pids, 0)
+    rows = logical % page_size
+    return pids.reshape(-1), rows.reshape(-1)
+
+
+def _write_kv_paged(pool, x, page_table, pos):
+    """Scatter x (B, S, KV, d) into pool (n_pages, G, KV, d) at the pages
+    ``page_table`` (B, n_ptab) names for logical rows [pos, pos+S).
+
+    Distinct slots own distinct pages, so real writes never collide; the
+    only duplicate targets are inert null-page rows (see _paged_indices).
+    """
+    b, s = x.shape[:2]
+    pids, rows = _paged_indices(page_table, pos, b, s, pool.shape[1])
+    vals = x.reshape((b * s,) + x.shape[2:]).astype(pool.dtype)
+    return pool.at[pids, rows].set(vals, mode="drop")
+
+
+def paged_cache_update(ck, cv, k, v, page_table, pos):
+    """fp paged write: k, v (B, S, KV, hd) into (n_pages, G, KV, hd)
+    pools at the rows the page table maps [pos, pos+S) to."""
+    return (_write_kv_paged(ck, k, page_table, pos),
+            _write_kv_paged(cv, v, page_table, pos))
+
+
+def paged_cache_update_quantized(ck, cks, cv, cvs, k, v, page_table, pos,
+                                 bits: int):
+    """int8 paged write: same quantizer as the contiguous cache
+    (``quantize_kv``), codes + per-token scales scattered page-wise —
+    the stored values are bitwise identical to the slot cache's."""
+    kq, ks = quantize_kv(k, bits)
+    vq, vs = quantize_kv(v, bits)
+    return (_write_kv_paged(ck, kq, page_table, pos),
+            _write_kv_paged(cks, ks, page_table, pos),
+            _write_kv_paged(cv, vq, page_table, pos),
+            _write_kv_paged(cvs, vs, page_table, pos))
+
+
+def gather_pages(pool, page_table):
+    """(n_pages, G, KV, d) pool + (B, n_ptab) table -> the logical
+    (B, n_ptab*G, KV, d) view — identical (content and shape) to the
+    contiguous slot cache over written rows, so downstream attention is
+    bitwise the same; unwritten/null rows are finite garbage masked by
+    the causal test."""
+    b, n_ptab = page_table.shape
+    g = pool.shape[1]
+    return pool[page_table].reshape((b, n_ptab * g) + pool.shape[2:])

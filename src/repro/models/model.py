@@ -25,6 +25,9 @@ class Model:
     init_cache: Callable      # (batch, max_len) -> cache
     prefill: Callable         # (params, tokens, cache, **kw) -> (logits, cache)
     decode: Callable          # (params, token, cache) -> (logits, cache)
+    # (n_pages, page_size) -> paged KV pool; None for families without a
+    # paged decode path (ssm/hybrid/encdec keep recurrent or dense state)
+    init_paged_cache: Optional[Callable] = None
 
 
 _FAMILIES = {
@@ -48,6 +51,10 @@ def build(cfg) -> Model:
         decode=lambda params, token, cache, **kw: mod.decode(cfg, params,
                                                              token, cache,
                                                              **kw),
+        init_paged_cache=(
+            (lambda n_pages, page_size: mod.init_paged_cache(
+                cfg, n_pages, page_size))
+            if hasattr(mod, "init_paged_cache") else None),
     )
 
 

@@ -43,11 +43,17 @@ class _StubModel:
                 "v": jnp.zeros((1, batch, max_len, 1, 1), jnp.float32),
                 "pos": jnp.int32(0)}
 
-    def prefill(self, params, tokens, cache):
-        pos = cache["pos"] + tokens.shape[1] - 1
-        nxt = _next_token(tokens[:, -1], pos)
+    def prefill(self, params, tokens, cache, logits_at=None):
+        # honor the engine's bucketing contract: logits (and the predicted
+        # next token) come from the row at ``logits_at`` — rows past it
+        # are padding a real model would causally ignore
+        if logits_at is None:
+            logits_at = jnp.int32(tokens.shape[1] - 1)
+        tok = jax.lax.dynamic_slice_in_dim(tokens, logits_at, 1, axis=1)
+        pos = cache["pos"] + logits_at
+        nxt = _next_token(tok[:, 0], pos)
         logits = jax.nn.one_hot(nxt, _V)[:, None, :]
-        return logits, dict(cache, pos=cache["pos"] + tokens.shape[1])
+        return logits, dict(cache, pos=pos + 1)
 
     def decode(self, params, token, cache):
         nxt = _next_token(token[:, 0], cache["pos"])   # pos: (B,) per slot
