@@ -1,8 +1,17 @@
 """Continuous-batching serving benchmark: the same seeded mixed-prompt
 workload drained through the engine with fp, int8, and int4-packed
 weights (int8 slot KV cache for the quantized rows). Emits the usual CSV
-rows plus a JSON artifact (results/serve_bench.json) with TTFT, tok/s,
-and slot-occupancy per variant.
+rows plus a JSON artifact (results/serve_bench.json, stamped with a
+``schema_version``) with TTFT, tok/s, per-step latency percentiles (ITL
+p50/p95), and slot-occupancy per variant.
+
+Unified-vs-legacy rows (``schedule_mixed``): a mixed workload of long
+prompts among short decodes, drained through the legacy
+(prefill-on-admit) engine and the unified token-budget scheduler. The
+readout is the ITL tail: legacy admission steps prefill a whole long
+prompt before the in-flight decodes run (head-of-line stall -> fat p95),
+unified packs at most ``max_batch_tokens`` per step so decode latency
+stays flat — with a token-identity check between the two engines.
 
 Paged-vs-slot rows (``kv_paged_50`` / ``kv_paged_100``): the same
 workload through the slot cache and the paged pool at ~50% and ~100%
@@ -107,6 +116,10 @@ def _paged_rows(rows, n_requests: int, n_slots: int) -> None:
         rows[f"kv_paged_{tag}"] = {
             "mean_seq_occupancy": mean_seq / max_len,
             "slot_kv_bytes": ss["kv_capacity_bytes"],
+            # the slot engine reports resident bytes too (== its capacity:
+            # every slot reserves max_len rows up front) so the columns
+            # compare like for like
+            "slot_resident_kv_bytes_mean": ss["resident_kv_bytes_mean"],
             "paged_resident_kv_bytes_mean": ps["resident_kv_bytes_mean"],
             "paged_resident_kv_bytes_peak": ps["resident_kv_bytes_peak"],
             "paged_over_slot_kv_bytes": ratio,
@@ -126,6 +139,63 @@ def _paged_rows(rows, n_requests: int, n_slots: int) -> None:
              f"identical={identical}")
 
 
+def _unified_rows(rows, n_slots: int) -> None:
+    """Legacy vs unified schedule over the same mixed long-prompt/decode
+    workload: long admissions stall legacy's in-flight decodes (ITL p95
+    tail), while the unified token budget caps per-step work. Both
+    engines must stay token-identical (they are bitwise so)."""
+    from repro.data import request_workload
+    from repro.launch.engine import ServeEngine
+    from repro.launch.serve import build_served_model
+
+    cfg, model, params, _ = build_served_model(
+        "catlm_60m", "fp", 0, 0, 8, smoke=True, seed=0)
+    gen, max_len, budget = 8, 72, 12
+    reqs = request_workload(cfg, 10, gen=gen, lengths=(4, 48), seed=0)
+    outs = {}
+    # both engines serve the SAME paged pool with chunked prefill (one
+    # prefill compile each) so the only variable is the schedule itself:
+    # legacy still prefills a whole admission before its decode dispatch,
+    # unified packs at most `budget` tokens per step
+    for name, kw in (("legacy", dict(paged=True, page_size=8,
+                                     prefill_chunk=8)),
+                     ("unified", dict(schedule="unified",
+                                      max_batch_tokens=budget,
+                                      paged=True, page_size=8))):
+        eng = ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
+                          **kw)
+        res = eng.run(reqs)
+        outs[name] = (res, eng.summary())
+    identical = all((outs["legacy"][0][r["rid"]].tokens
+                     == outs["unified"][0][r["rid"]].tokens).all()
+                    for r in reqs)
+    ls, us = outs["legacy"][1], outs["unified"][1]
+    rows["schedule_mixed"] = {
+        "workload": "mixed long-prompt (48t) / short (4t), gen 8",
+        "max_batch_tokens": budget,
+        "legacy_itl_p50_s": ls["itl_p50_s"],
+        "legacy_itl_p95_s": ls["itl_p95_s"],
+        "unified_itl_p50_s": us["itl_p50_s"],
+        "unified_itl_p95_s": us["itl_p95_s"],
+        "itl_p95_unified_over_legacy": (us["itl_p95_s"] / ls["itl_p95_s"]
+                                        if ls["itl_p95_s"] else 0.0),
+        "legacy_tok_per_s": ls["tok_per_s"],
+        "unified_tok_per_s": us["tok_per_s"],
+        "unified_packed_tokens_max": us["packed_tokens_max"],
+        "token_identical": bool(identical),
+        "n_requests": len(reqs), "n_slots": n_slots,
+    }
+    emit("serve_schedule_mixed", us["wall_s"] * 1e6,
+         f"itl_p95_ms legacy={ls['itl_p95_s'] * 1e3:.1f} "
+         f"unified={us['itl_p95_s'] * 1e3:.1f} "
+         f"identical={identical}")
+
+
+# results/serve_bench.json layout: {"schema_version": N, "rows": {...}}.
+# Bump on any row-shape change so downstream readers can dispatch.
+SCHEMA_VERSION = 2
+
+
 def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
          out_path: str = "results/serve_bench.json") -> None:
     rows = {}
@@ -139,6 +209,8 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
             "transform": transform, "w_bits": w_bits, "kv_bits": kv_bits,
             "ttft_s_mean": eng["ttft_s_mean"],
             "ttft_s_max": eng["ttft_s_max"],
+            "itl_p50_s": eng["itl_p50_s"],
+            "itl_p95_s": eng["itl_p95_s"],
             "tok_per_s": eng["tok_per_s"],
             "occupancy_mean": eng["occupancy_mean"],
             "queue_depth_max": eng["queue_depth_max"],
@@ -158,11 +230,13 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
         r = rows["int4_packed"]["weight_bytes"] / rows["int8"]["weight_bytes"]
         emit("serve_w4_vs_w8_weight_bytes", 0.0, f"ratio={r:.2f}")
     _paged_rows(rows, n_requests, n_slots)
+    _unified_rows(rows, n_slots)
     _tp_rows(rows, n_requests, n_slots, gen)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(rows, f, indent=2)
-    emit("serve_bench_json", 0.0, out_path)
+        json.dump({"schema_version": SCHEMA_VERSION, "rows": rows}, f,
+                  indent=2)
+    emit("serve_bench_json", 0.0, f"{out_path} schema_v{SCHEMA_VERSION}")
 
 
 if __name__ == "__main__":

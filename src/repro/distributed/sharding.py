@@ -369,6 +369,18 @@ def tp_cache_specs(cache, mesh, axis: str = "model",
         is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
 
 
+def ragged_desc_specs(desc) -> dict:
+    """PartitionSpecs for the unified ragged step's host-built descriptor
+    arrays (packed tokens / per-token positions / page-table rows / logit
+    rows / kernel query blocks): everything **replicates** — descriptors
+    are tiny int32 control data indexing the *global* page pool, exactly
+    like ``pos``/``page_table`` in ``tp_cache_specs``; only the KV pools
+    and params shard. Works on arrays or ShapeDtypeStructs."""
+    return jax.tree.map(lambda a: P(*([None] * len(a.shape))), desc,
+                        is_leaf=lambda x: hasattr(x, "shape")
+                        and not isinstance(x, dict))
+
+
 def named(spec_tree, mesh):
     """PartitionSpec tree -> NamedSharding tree (device_put / jit)."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,

@@ -15,7 +15,10 @@ import jax.numpy as jnp
 from .block_matmul import block_diag_matmul
 from .dynamic_quant import dynamic_quant
 from .hadamard import hadamard_transform
-from .paged_attention import paged_attention_decode, paged_attention_fallback
+from .paged_attention import (paged_attention_decode,
+                              paged_attention_fallback,
+                              paged_attention_ragged,
+                              paged_attention_ragged_fallback)
 from .quant_matmul import quant_matmul
 from .quant_matmul_w4 import _GEMV_M, quant_gemv_w4, quant_matmul_w4
 
@@ -114,6 +117,23 @@ def paged_attention(q, k_pages, k_scale, v_pages, v_scale, page_table,
     kw.setdefault("interpret", default_interpret())
     return paged_attention_decode(q, k_pages, k_scale, v_pages, v_scale,
                                   page_table, lengths, **kw)
+
+
+def ragged_paged_attention(q, k_pages, k_scale, v_pages, v_scale,
+                           page_table, lengths, q_pos, **kw):
+    """Mixed-q_len paged attention for the unified token-budget step:
+    per-work-item query blocks against the page pool, with the
+    per-(query, kv) causal mask applied inside the launch — prefill
+    chunks and decode tokens share one kernel call. int8 pools go to the
+    Pallas kernel, fp pools (no scales to stream) to the jnp fallback.
+    """
+    if k_scale is None or v_scale is None:
+        return paged_attention_ragged_fallback(q, k_pages, k_scale,
+                                               v_pages, v_scale,
+                                               page_table, lengths, q_pos)
+    kw.setdefault("interpret", default_interpret())
+    return paged_attention_ragged(q, k_pages, k_scale, v_pages, v_scale,
+                                  page_table, lengths, q_pos, **kw)
 
 
 # ------------------------------------------------- tensor-parallel wrappers

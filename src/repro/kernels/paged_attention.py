@@ -26,6 +26,12 @@ weight exactly.
 ``repro.kernels.ref.paged_attention_decode`` is the jnp oracle;
 ``paged_attention_fallback`` is a gather-based jnp path for fp pools and
 backends without Pallas.
+
+``paged_attention_ragged`` generalizes the q_len=1 decode kernel to a
+*block of queries per sequence* with a per-(query, kv) causal mask — the
+shape of a unified token-budget step, where one launch covers every
+prefill chunk and decode token packed into the step and each sequence's
+pages stream exactly once (see ``repro.launch.scheduler``).
 """
 from __future__ import annotations
 
@@ -130,6 +136,152 @@ def paged_attention_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
         interpret=interpret,
     )(lengths, page_table, qs, k_pages, k_scale, v_pages, v_scale)
+
+
+# ------------------------------------------------- ragged (mixed q_len)
+
+def _ragged_attn_kernel(len_ref, pt_ref, q_ref, qpos_ref, k_ref, ks_ref,
+                        v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        page_size: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (Q, KVH, g, hd)
+    qpos = qpos_ref[0]                            # (Q,) absolute positions
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0]  # (G, KVH, hd) dequant
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0]
+
+    # scores for this page: (Q, KVH, g, G)
+    s = jnp.einsum("qkgd,Gkd->qkgG", q, k,
+                   preferred_element_type=jnp.float32)
+    kv_pos = i * page_size + jax.lax.iota(jnp.int32, page_size)
+    # per-(query, kv) causal mask inside the chunk: a prefill row at
+    # position p sees exactly kv_pos <= p (its same-step chunk-mates
+    # beyond p were already written but stay masked); padded query rows
+    # (qpos < 0) mask everything and their garbage output is discarded
+    mask = ((kv_pos[None, :] <= qpos[:, None])
+            & (kv_pos[None, :] < len_ref[b])
+            & (qpos[:, None] >= 0))
+    s = jnp.where(mask[:, None, None, :], s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[..., None]
+                    + jnp.einsum("qkgG,Gkd->qkgd", p, v,
+                                 preferred_element_type=jnp.float32))
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[...] = out.astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_ragged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           k_scale: jnp.ndarray, v_pages: jnp.ndarray,
+                           v_scale: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, q_pos: jnp.ndarray,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Mixed-q_len paged attention: the q_len=1 decode kernel generalized
+    to a *block of queries per sequence*, so one launch serves a unified
+    token-budget step — each grid row is one work item (a prefill chunk
+    OR a decode token) and its pages stream from HBM exactly once for
+    all of its queries.
+
+    q           (B, Q, KVH, g, hd)  per-item query blocks (right-padded)
+    k/v_pages   (n_pages, G, KVH, hd) int8 codes
+    k/v_scale   (n_pages, G, KVH, 1) f32 per-(token, head) scales
+    page_table  (B, n_ptab) int32 physical page ids (0 = null page)
+    lengths     (B,) int32 valid kv rows per item (last query's pos + 1)
+    q_pos       (B, Q) int32 absolute position per query row; -1 marks
+                padding rows (fully masked, output garbage — discard)
+    -> (B, Q, KVH, g, hd) in q's dtype. ``q_len=1`` with
+    ``q_pos = lengths - 1`` reproduces ``paged_attention_decode``.
+    """
+    b, nq, kvh, g, hd = q.shape
+    n_pages, page_size, kvh_p, _ = k_pages.shape
+    n_ptab = page_table.shape[1]
+    assert kvh_p == kvh, (q.shape, k_pages.shape)
+    assert page_table.shape[0] == b and lengths.shape == (b,)
+    assert q_pos.shape == (b, nq), (q_pos.shape, q.shape)
+
+    qs = (q.astype(jnp.float32) * hd ** -0.5).astype(q.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # lengths, page_table
+        grid=(b, n_ptab),
+        in_specs=[
+            pl.BlockSpec((1, nq, kvh, g, hd),
+                         lambda bb, i, ln, pt: (bb, 0, 0, 0, 0)),
+            pl.BlockSpec((1, nq), lambda bb, i, ln, pt: (bb, 0)),
+            pl.BlockSpec((1, page_size, kvh, hd),
+                         lambda bb, i, ln, pt: (pt[bb, i], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, 1),
+                         lambda bb, i, ln, pt: (pt[bb, i], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, hd),
+                         lambda bb, i, ln, pt: (pt[bb, i], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, 1),
+                         lambda bb, i, ln, pt: (pt[bb, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nq, kvh, g, hd),
+                               lambda bb, i, ln, pt: (bb, 0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nq, kvh, g), jnp.float32),       # running max
+            pltpu.VMEM((nq, kvh, g), jnp.float32),       # running denom
+            pltpu.VMEM((nq, kvh, g, hd), jnp.float32),   # running numerator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_attn_kernel, page_size=page_size),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nq, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, page_table, qs, q_pos, k_pages, k_scale, v_pages, v_scale)
+
+
+def paged_attention_ragged_fallback(q: jnp.ndarray, k_pages, k_scale,
+                                    v_pages, v_scale,
+                                    page_table: jnp.ndarray,
+                                    lengths: jnp.ndarray,
+                                    q_pos: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp ragged paged attention (same contract as the kernel).
+
+    Gathers each item's logical view and runs a per-(query, kv) causally
+    masked softmax in f32. Also serves fp pools: pass ``k_scale``/
+    ``v_scale`` as ``None`` and fp ``*_pages``.
+    """
+    b, nq, kvh, g, hd = q.shape
+    page_size = k_pages.shape[1]
+
+    def logical(pages, scale):
+        view = pages[page_table].reshape(b, -1, kvh, hd)  # (B, S, KVH, hd)
+        if scale is None:
+            return view.astype(jnp.float32)
+        sc = scale[page_table].reshape(b, -1, kvh, 1)
+        return view.astype(jnp.float32) * sc
+
+    k = logical(k_pages, k_scale)
+    v = logical(v_pages, v_scale)
+    skv = page_table.shape[1] * page_size
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qf, k)
+    kv = jnp.arange(skv, dtype=jnp.int32)
+    mask = ((kv[None, None, :] <= q_pos[:, :, None])
+            & (kv[None, None, :] < lengths[:, None, None])
+            & (q_pos[:, :, None] >= 0))
+    s = jnp.where(mask[:, :, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p, v)
+    return out.astype(q.dtype)
 
 
 def paged_attention_fallback(q: jnp.ndarray, k_pages, k_scale, v_pages,

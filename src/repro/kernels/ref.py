@@ -120,6 +120,27 @@ def paged_attention_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
                                     page_table, lengths)
 
 
+def paged_attention_ragged(q: jnp.ndarray, k_pages, k_scale,
+                           v_pages: jnp.ndarray, v_scale,
+                           page_table: jnp.ndarray, lengths: jnp.ndarray,
+                           q_pos: jnp.ndarray) -> jnp.ndarray:
+    """Ragged (mixed q_len) paged-attention oracle.
+
+    q (B, Q, KVH, g, hd) per-work-item query blocks; q_pos (B, Q)
+    absolute positions (-1 = padding row, fully masked); other operands
+    as in ``paged_attention_decode``. Each query row attends exactly the
+    kv rows at positions <= its own — the per-(query, kv) causal test
+    that makes prefill chunks and decode tokens composable in one batch.
+
+    Delegates to the canonical jnp gather path (same pattern as
+    ``paged_attention_decode``); the Pallas kernel's per-page
+    online-softmax reformulation is what gets validated against this."""
+    from repro.kernels.paged_attention import paged_attention_ragged_fallback
+    return paged_attention_ragged_fallback(q, k_pages, k_scale, v_pages,
+                                           v_scale, page_table, lengths,
+                                           q_pos)
+
+
 def block_diag_matmul(x: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
     """y = x @ Tᵀ for block-diagonal T = Diag(B_1..B_n); blocks (n, k, k).
     y[..., i, a] = Σ_b blocks[i, a, b] · x[..., i, b]."""

@@ -1,9 +1,16 @@
 """Continuous-batching serve engine over a slot-allocated quantized KV cache.
 
-Requests with arbitrary prompt lengths enter a FIFO queue. The engine owns
-a shared KV cache of ``n_slots`` independent sequence rows (int8 codes +
-per-token scales when the config sets ``kv_quant_bits``, bf16/f32
-otherwise). Each engine step interleaves:
+``ServeEngine`` is a thin façade over two modules:
+
+- ``repro.launch.scheduler`` — host-side policy: request queue, slot
+  lifecycle, and (in unified mode) the token-budget planner;
+- ``repro.launch.executor`` — device side: jitted/shard_mapped prefill,
+  decode, and the unified ragged step, with donated caches.
+
+Two scheduling modes share the same API, caches, and metrics:
+
+**legacy** (default, the historical engine — and the oracle the unified
+mode is golden-tested against). Each step interleaves:
 
   1. **admit** — while a slot is free and the queue is non-empty, pop the
      oldest request, prefill it alone (batch-1) against its slot's cache
@@ -19,112 +26,57 @@ otherwise). Each engine step interleaves:
 Slot reuse needs no cache zeroing: a new occupant's prefill overwrites
 rows [0, P) and every stale row beyond the slot's position is masked by
 the causal (position >= kv position) test inside ``chunked_attention``.
-
 Decode always runs the full ``n_slots`` batch (free slots carry a dummy
-token at position 0 whose output is discarded) so the decode step compiles
-exactly once. Prefill compile count is tamed two ways:
+token at position 0 whose output is discarded) so the decode step
+compiles exactly once; prefill compile count is tamed by pow-2
+**bucketing** (default) or fixed-size **chunked prefill**
+(``prefill_chunk=C``, paged mode).
 
-- **bucketing** (default, ``bucket=True``): prompts pad right to the next
-  power-of-two length and the logits slice at the true last prompt token
-  (``logits_at``), so prefill compiles O(log max_len) times instead of
-  once per distinct prompt length;
-- **chunked prefill** (``prefill_chunk=C``, paged mode): the prompt feeds
-  through in fixed C-token chunks at successive cache offsets — ONE
-  prefill compile total, independent of the length distribution.
+Legacy's weakness is head-of-line coupling: prefill-on-admit runs as its
+own dispatch(es) *before* the decode step, so a long admission stalls
+every in-flight decode (TTFT work blocks ITL).
 
-``paged=True`` swaps the slot-contiguous cache for a **paged KV pool**
-(``repro.launch.paged``): fixed-size pages allocated lazily as sequences
-grow, per-slot page tables gathered on device, token-identical output to
-the slot cache (the gathered logical view is bitwise the same tensor).
-See ``src/repro/launch/README.md`` for diagrams and the pool sizing
-formula.
+**unified** (``schedule="unified"``) removes that coupling with a
+vLLM-style token budget: each step the scheduler packs up to
+``max_batch_tokens`` of work — one decode token per running slot plus
+prefill *chunks* for admitting ones — into ONE ragged model invocation
+(``models.dense.ragged_step``) against the paged KV pool. Long prompts
+spread across steps instead of stalling them, decode tokens ride in
+every step, and the fixed packing width gives O(1) step compile shapes.
+Decoded tokens are **bitwise identical** to legacy (the per-row numerics
+are unchanged; the golden fixtures run against both modes).
+
+``paged=True`` (implied by unified) swaps the slot-contiguous cache for
+a **paged KV pool** (``repro.launch.paged``): fixed-size pages allocated
+lazily as sequences grow, per-slot page tables gathered on device,
+token-identical output to the slot cache. See
+``src/repro/launch/README.md`` for diagrams and the pool sizing formula.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from collections import deque
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-# ----------------------------------------------------------- request types
-
-@dataclasses.dataclass
-class Request:
-    """One generation request: ``prompt`` (P,) int32, decode budget."""
-    rid: int
-    prompt: np.ndarray
-    max_new_tokens: int
-    submit_time: float = 0.0
-
-
-@dataclasses.dataclass
-class RequestResult:
-    rid: int
-    tokens: np.ndarray            # (P + G,) prompt followed by G generated
-    prompt_len: int
-    ttft_s: float                 # submit -> first token (prefill) latency
-    admit_step: int
-    retire_step: int
+# Re-exported for backward compatibility: these historically lived here.
+from repro.launch.executor import (LegacyExecutor, RaggedExecutor,
+                                   jitted_model_fns)  # noqa: F401
+from repro.launch.scheduler import (Request, RequestResult, SeqState,
+                                    TokenBudgetScheduler)
 
 
 @dataclasses.dataclass
 class _Active:
+    """Legacy-mode per-slot record (unified mode uses ``SeqState``)."""
     req: Request
     slot: int
     generated: list
     admit_step: int
     ttft_s: float
-
-
-# ------------------------------------------------------------- jit helpers
-
-@functools.lru_cache(maxsize=8)
-def jitted_model_fns(model):
-    """(jit prefill, jit decode) cached per model so repeated engine /
-    oracle runs over the same model share compilations."""
-    return jax.jit(model.prefill), jax.jit(model.decode)
-
-
-@jax.jit
-def _take_slot(cache, slot):
-    """Slice one slot's batch-1 cache out of the shared (L, n_slots, ...)
-    arrays (leaf layout: layer axis 0, slot axis 1)."""
-    return jax.tree.map(
-        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache)
-
-
-# Donating the shared cache lets XLA write the slot rows in place on
-# backends with buffer donation (TPU); CPU falls back to a copy.
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _put_slot(cache, part, slot):
-    return jax.tree.map(
-        lambda a, p: jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1),
-        cache, part)
-
-
-# Single-device admissions run take -> prefill -> put as ONE jitted
-# program: the slot's rows are sliced, prefilled, and written back without
-# the per-slot part ever surfacing as separate host-boundary buffers
-# between three dispatches (the old take/prefill/put ping-pong). The
-# shared cache is donated so XLA can update the slot rows in place.
-# ``prefill_fn`` is static (one compile per model × token shape).
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
-def _prefill_slot_fused(prefill_fn, params, cache, tokens, slot, logits_at):
-    part = jax.tree.map(
-        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache)
-    logits, part = prefill_fn(params, tokens, dict(part, pos=jnp.int32(0)),
-                              logits_at=logits_at)
-    part.pop("pos")
-    cache = jax.tree.map(
-        lambda a, p: jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1),
-        cache, part)
-    return logits, cache
 
 
 # ------------------------------------------------------------------ engine
@@ -145,14 +97,24 @@ class ServeEngine:
                  tp_mode: str = "gather", tp_kernels: bool = False,
                  paged: bool = False, page_size: int = 16,
                  prefill_chunk: int = 0, n_pages: int = 0,
-                 bucket: bool = True, paged_kernel: bool = False):
+                 bucket: bool = True, paged_kernel: bool = False,
+                 schedule: str = "legacy", max_batch_tokens: int = 0):
         family = getattr(model.cfg, "family", "dense")
         if family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
                 f"ServeEngine needs per-slot position vectors in decode, "
                 f"implemented for {self._SLOT_FAMILIES}; got family "
                 f"{family!r}")
-        self.model, self.params = model, params
+        if schedule not in ("legacy", "unified"):
+            raise ValueError(f"schedule must be 'legacy' or 'unified', "
+                             f"got {schedule!r}")
+        if schedule == "unified":
+            paged = True    # the unified step serves from the paged pool
+        elif max_batch_tokens:
+            raise ValueError("max_batch_tokens needs schedule='unified' "
+                             "(legacy packs per-slot, not per-token)")
+        self.model = model
+        self.schedule = schedule
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
         self.paged, self.bucket = paged, bucket
         self.prefill_chunk, self.paged_kernel = prefill_chunk, paged_kernel
@@ -171,7 +133,10 @@ class ServeEngine:
                 raise ValueError(
                     f"page_size={page_size} must be a multiple of the KV "
                     f"quant scale group ({KV_QUANT_GROUP})")
-            if prefill_chunk and prefill_chunk % page_size:
+            if prefill_chunk and prefill_chunk % page_size \
+                    and schedule == "legacy":
+                # unified chunks are budget-sliced scatter writes, free of
+                # page alignment; legacy chunks must write whole pages
                 raise ValueError(
                     f"prefill_chunk={prefill_chunk} must be a multiple of "
                     f"page_size={page_size} (chunks write whole pages)")
@@ -182,7 +147,7 @@ class ServeEngine:
             self.pool = PagePool(n_pages, page_size)
             self.tables = SlotPageTables(self.pool, n_slots, n_ptab)
             cache = model.init_paged_cache(n_pages, page_size)
-            self._cache = dict(cache)
+            cache = dict(cache)
         else:
             if prefill_chunk:
                 raise ValueError("prefill_chunk needs paged=True (the slot "
@@ -192,135 +157,54 @@ class ServeEngine:
                 raise ValueError("paged_kernel needs paged=True")
             self._kv_len = max_len
             cache = model.init_cache(n_slots, max_len)
-            self._cache = {k: v for k, v in cache.items() if k != "pos"}
+            cache = {k: v for k, v in cache.items() if k != "pos"}
         self.quantized_kv = "k_scale" in cache
-        self._page_bytes = (sum(v.nbytes for v in self._cache.values())
+        self._page_bytes = (sum(v.nbytes for v in cache.values())
                             // n_pages if paged else 0)
-        self._pos = np.zeros((n_slots,), np.int32)     # per-slot positions
-        self._free = list(range(n_slots))
-        self._queue: deque[Request] = deque()
-        self._active: dict[int, _Active] = {}          # slot -> request
         self.mesh = mesh
-        if mesh is None:
-            self._prefill, self._decode = jitted_model_fns(model)
-            if paged:
-                # paged prefill/decode round-trip the ENTIRE global pool
-                # (not a batch-1 slot part), so donate the cache arg —
-                # in-place pool updates on donation-capable backends,
-                # mirroring what _prefill_slot_fused does for slots
-                self._prefill = jax.jit(model.prefill, donate_argnums=(2,))
-                dec = (lambda p, t, c: model.decode(p, t, c,
-                                                    paged_kernel=True)
-                       ) if paged_kernel else model.decode
-                self._decode = jax.jit(dec, donate_argnums=(2,))
+        tp_kw = dict(mesh=mesh, tp_axis=tp_axis, tp_mode=tp_mode,
+                     tp_kernels=tp_kernels)
+        if schedule == "unified":
+            self.max_batch_tokens = max_batch_tokens or max(16, 2 * n_slots)
+            self.sched = TokenBudgetScheduler(
+                n_slots, self.max_batch_tokens, pool=self.pool,
+                tables=self.tables, prefill_chunk=prefill_chunk,
+                eos_id=eos_id)
+            self.exec = RaggedExecutor(model, params, cache,
+                                       paged_kernel=paged_kernel, **tp_kw)
+            # shared host state lives in the scheduler; alias it so the
+            # introspection surface matches legacy mode
+            self._queue = self.sched.queue
+            self._free = self.sched.free
+            self._active = self.sched.active
         else:
-            self._init_mesh_fns(mesh, tp_axis, tp_mode, tp_kernels)
+            self.max_batch_tokens = 0
+            self.sched = None
+            self.exec = LegacyExecutor(model, params, cache,
+                                       n_slots=n_slots, paged=paged,
+                                       paged_kernel=paged_kernel, **tp_kw)
+            self._queue = deque()
+            self._free = list(range(n_slots))
+            self._active = {}          # slot -> _Active
+        self.params = self.exec.params
+        self._pos = np.zeros((n_slots,), np.int32)     # per-slot positions
         self.step_count = 0
         self._next_rid = 0
         self.events: list[tuple] = []   # ("admit"|"retire", rid, slot, step)
         self.results: dict[int, RequestResult] = {}
         self.metrics = {"queue_depth": [], "occupancy": [],
-                        "resident_kv_bytes": [],
+                        "resident_kv_bytes": [], "step_s": [],
                         "generated_tokens": 0, "decode_steps": 0}
 
-    # -------------------------------------------------------- mesh serving
+    # The executor owns the device cache; expose it under the historical
+    # name so engine code (and tests) read/write one source of truth.
+    @property
+    def _cache(self):
+        return self.exec.cache
 
-    def _init_mesh_fns(self, mesh, tp_axis: str, tp_mode: str,
-                       tp_kernels: bool) -> None:
-        """Tensor-parallel serving: params and the shared slot KV cache
-        are device_put with quantization-aware shardings
-        (``distributed.sharding.tp_param_specs`` / ``tp_cache_specs``) and
-        prefill/decode run the TP forward inside shard_map. Slot
-        bookkeeping (queue, free list, positions) stays host-side and is
-        identical to the single-device engine; in ``tp_mode="gather"``
-        (default) the decoded tokens are bit-identical to it too."""
-        from jax.sharding import PartitionSpec as P
-
-        from repro.core.qlinear import iter_qlinear
-        from repro.distributed.compat import shard_map
-        from repro.distributed import sharding as shlib
-
-        cfg = self.model.cfg
-        if cfg.n_experts:
-            raise NotImplementedError("mesh serving covers the dense "
-                                      "(non-MoE) family")
-        tp = mesh.shape[tp_axis]
-        packed = any(l.packed for _, l in iter_qlinear(self.params))
-        unit = 2 * tp if (packed and tp_mode == "psum") else tp
-        for dim, name in ((cfg.n_heads, "n_heads"),
-                          (cfg.n_kv_heads, "n_kv_heads")):
-            if dim % tp:
-                raise ValueError(
-                    f"{name}={dim} must divide by {tp_axis}={tp} (whole "
-                    f"heads per shard)")
-        for dim, name in ((cfg.q_dim, "q_dim"), (cfg.d_ff, "d_ff")):
-            if dim % unit:
-                raise ValueError(
-                    f"{name}={dim} must divide by {unit} "
-                    f"({tp_axis}={tp}"
-                    + (", ×2: int4-packed row shards hold whole bytes)"
-                       if unit != tp else ")"))
-        dp_axis = next((a for a in ("data", "pod")
-                        if a in mesh.axis_names
-                        and self.n_slots % mesh.shape[a] == 0
-                        and mesh.shape[a] > 1), None)
-        if self.paged and dp_axis is not None:
-            raise NotImplementedError(
-                "paged mesh serving is tensor-parallel only: the page pool "
-                "is a global (not per-slot) allocation, so its writes "
-                "cannot shard over a data axis — use a (1, tp) mesh")
-
-        pspecs = shlib.tp_param_specs(self.params, mesh, axis=tp_axis,
-                                      cfg=cfg, row_mode=tp_mode)
-        dec_cspecs = shlib.tp_cache_specs(self._cache, mesh, axis=tp_axis,
-                                          dp_axis=dp_axis)
-        if self.paged:
-            # prefill sees the same global pool as decode (only the page
-            # table narrows to the admitted slot's row)
-            pre_cspecs = dec_cspecs
-        else:
-            part_shapes = jax.eval_shape(
-                lambda c: jax.tree.map(lambda a: a[:, :1], c), self._cache)
-            pre_cspecs = shlib.tp_cache_specs(part_shapes, mesh,
-                                              axis=tp_axis)
-        self.params = jax.device_put(self.params, shlib.named(pspecs, mesh))
-        self._cache = jax.device_put(self._cache,
-                                     shlib.named(dec_cspecs, mesh))
-        tok_spec = P(dp_axis, None)
-        # the (B,) per-slot position vector shards with the slot axis
-        pos_spec = P(dp_axis) if dp_axis else P()
-        tp_kw = dict(tp_axis=tp_axis, tp_mode=tp_mode, tp_kernels=tp_kernels)
-        if self.paged:
-            # page tables replicate (every shard gathers/scatters its own
-            # head slice of the same physical pages)
-            pt_spec = {"page_table": P(None, None)}
-            pre_extra = dict(pt_spec, pos=P())
-            dec_extra = dict(pt_spec, pos=pos_spec)
-        else:
-            pre_extra, dec_extra = {"pos": P()}, {"pos": pos_spec}
-        model = self.model
-        pk = self.paged_kernel
-
-        def pre(p, t, c, la):
-            return model.prefill(p, t, c, logits_at=la, **tp_kw)
-
-        def dec(p, t, c):
-            if pk:
-                return model.decode(p, t, c, paged_kernel=True, **tp_kw)
-            return model.decode(p, t, c, **tp_kw)
-
-        self._prefill = jax.jit(shard_map(
-            pre, mesh=mesh,
-            in_specs=(pspecs, P(None, None), dict(pre_cspecs, **pre_extra),
-                      P()),
-            out_specs=(P(None, None, None), dict(pre_cspecs, **pre_extra)),
-            check_vma=False))
-        self._decode = jax.jit(shard_map(
-            dec, mesh=mesh,
-            in_specs=(pspecs, tok_spec, dict(dec_cspecs, **dec_extra)),
-            out_specs=(P(dp_axis, None, None),
-                       dict(dec_cspecs, **dec_extra)),
-            check_vma=False))
+    @_cache.setter
+    def _cache(self, value):
+        self.exec.cache = value
 
     # ------------------------------------------------------------- intake
 
@@ -354,7 +238,7 @@ class ServeEngine:
                                    submit_time=time.time()))
         return rid
 
-    # ------------------------------------------------------ slot lifecycle
+    # ---------------------------------------------- legacy slot lifecycle
 
     def _bucketed(self, prompt: np.ndarray):
         """Right-pad a prompt to its power-of-two bucket (compile-count
@@ -391,35 +275,7 @@ class ServeEngine:
                                                      chunk - 1))))
         logits = None
         for toks, off, last in spans:
-            cache = dict(self._cache, page_table=row, pos=jnp.int32(off))
-            if self.mesh is None:
-                logits, cache = self._prefill(self.params, toks[None], cache,
-                                              logits_at=jnp.int32(last))
-            else:
-                logits, cache = self._prefill(self.params, toks[None], cache,
-                                              jnp.int32(last))
-            cache.pop("pos")
-            # rebind: the input row buffer was donated with the cache
-            row = cache.pop("page_table")
-            self._cache = cache
-        return logits
-
-    def _prefill_slot(self, req: Request, slot: int):
-        """Slot-cache prefill: fused take->prefill->put in one dispatch
-        (single device) or explicit take/put around the shard_map'd
-        forward (mesh)."""
-        toks, last = self._bucketed(req.prompt)
-        if self.mesh is None:
-            logits, self._cache = _prefill_slot_fused(
-                self.model.prefill, self.params, self._cache, toks[None],
-                np.int32(slot), jnp.int32(last))
-            return logits
-        part = dict(_take_slot(self._cache, np.int32(slot)),
-                    pos=jnp.int32(0))
-        logits, part = self._prefill(self.params, toks[None], part,
-                                     jnp.int32(last))
-        part.pop("pos")
-        self._cache = _put_slot(self._cache, part, np.int32(slot))
+            logits, row = self.exec.prefill_paged_span(toks, row, off, last)
         return logits
 
     def _admit(self) -> None:
@@ -437,7 +293,8 @@ class ServeEngine:
                                   budget_tokens=p + req.max_new_tokens)
                 logits = self._prefill_paged(req, slot)
             else:
-                logits = self._prefill_slot(req, slot)
+                toks, last = self._bucketed(req.prompt)
+                logits = self.exec.prefill_slot(toks, slot, last)
             self._pos[slot] = p
             tok = int(np.argmax(np.asarray(logits[0, -1])))
             rec = _Active(req, slot, [tok], self.step_count,
@@ -478,14 +335,23 @@ class ServeEngine:
     def resident_kv_bytes(self) -> int:
         """KV bytes actually reserved for live sequences: allocated pages
         (paged) or the whole slot allocation (contiguous — every slot
-        reserves max_len rows up front regardless of use)."""
+        reserves max_len rows up front regardless of use). Reported in
+        BOTH modes so slot-vs-paged benchmark rows compare like for
+        like."""
         if self.paged:
             return self.pool.in_use * self._page_bytes
         return sum(v.nbytes for v in self._cache.values())
 
     def step(self) -> dict:
-        """One admit + batched-decode + retire cycle; returns step stats."""
+        """One engine cycle; returns step stats. Legacy: admit (prefill
+        dispatches) + one batched decode + retire. Unified: plan one
+        token-budgeted ragged step, run it, feed tokens back, retire."""
+        if self.schedule == "unified":
+            return self._step_unified()
+        t0 = time.perf_counter()
+        events_before = len(self.events)
         self._admit()
+        admitted = len(self.events) > events_before
         self.metrics["queue_depth"].append(len(self._queue))
         occ = len(self._active) / self.n_slots
         self.metrics["occupancy"].append(occ)
@@ -499,15 +365,8 @@ class ServeEngine:
         # the pages the decode write below is about to land in
         self.metrics["resident_kv_bytes"].append(self.resident_kv_bytes())
         if self._active:
-            cache = dict(self._cache, pos=jnp.asarray(self._pos))
-            if self.paged:
-                cache["page_table"] = jnp.asarray(self.tables.table)
-            logits, cache = self._decode(self.params, jnp.asarray(toks),
-                                         cache)
-            cache.pop("pos")
-            cache.pop("page_table", None)
-            self._cache = cache
-            logits = np.asarray(logits)
+            table = jnp.asarray(self.tables.table) if self.paged else None
+            logits = self.exec.decode(toks, self._pos, table)
             self.metrics["decode_steps"] += 1
             for slot, rec in list(self._active.items()):
                 self._pos[slot] += 1          # the fed token was cached
@@ -515,9 +374,53 @@ class ServeEngine:
                 self.metrics["generated_tokens"] += 1
                 if self._finished(rec):
                     self._retire(rec)
+        if admitted or occ > 0:
+            self.metrics["step_s"].append(time.perf_counter() - t0)
         self.step_count += 1
         return {"queue_depth": self.metrics["queue_depth"][-1],
                 "occupancy": occ, "active": len(self._active)}
+
+    def _step_unified(self) -> dict:
+        t0 = time.perf_counter()
+        plan = self.sched.plan(self.step_count)
+        for rid, slot in plan.admitted:
+            self.events.append(("admit", rid, slot, self.step_count))
+        self.metrics["queue_depth"].append(len(self._queue))
+        occ = len(self._active) / self.n_slots
+        self.metrics["occupancy"].append(occ)
+        self.metrics["resident_kv_bytes"].append(self.resident_kv_bytes())
+        if plan.n_tokens:
+            packed = self.sched.pack(plan, kernel_desc=self.paged_kernel)
+            logits = self.exec.step(packed)
+            toks = np.argmax(logits[:packed["n_logits"], -1], axis=-1)
+            retired = self.sched.observe(plan, toks, time.time())
+            self.metrics["generated_tokens"] += int(packed["n_logits"])
+            if plan.decode:
+                self.metrics["decode_steps"] += 1
+            for seq in retired:
+                self._retire_seq(seq)
+            self.metrics["step_s"].append(time.perf_counter() - t0)
+        self.step_count += 1
+        return {"queue_depth": self.metrics["queue_depth"][-1],
+                "occupancy": occ, "active": len(self._active),
+                "packed_tokens": plan.n_tokens}
+
+    def _retire_seq(self, seq: SeqState) -> None:
+        """Unified-mode retirement bookkeeping (the scheduler already
+        freed the slot and released its pages in ``observe``)."""
+        rid = seq.req.rid
+        if rid in self.results:
+            raise RuntimeError(f"request {rid} retired twice")
+        self.results[rid] = RequestResult(
+            rid=rid,
+            tokens=np.concatenate([seq.req.prompt,
+                                   np.asarray(seq.generated, np.int32)]),
+            prompt_len=seq.prompt_len,
+            ttft_s=seq.ttft_s,
+            admit_step=seq.admit_step,
+            retire_step=self.step_count,
+        )
+        self.events.append(("retire", rid, seq.slot, self.step_count))
 
     @property
     def idle(self) -> bool:
@@ -539,6 +442,7 @@ class ServeEngine:
     def summary(self) -> dict:
         m = self.metrics
         ttfts = [r.ttft_s for r in self.results.values()]
+        step_s = m["step_s"]
         return {
             "n_requests": len(self.results),
             "n_slots": self.n_slots,
@@ -550,12 +454,20 @@ class ServeEngine:
                           if m.get("wall_s") else 0.0),
             "ttft_s_mean": float(np.mean(ttfts)) if ttfts else 0.0,
             "ttft_s_max": float(np.max(ttfts)) if ttfts else 0.0,
+            # per-step latency percentiles: the inter-token latency a
+            # decoding request observes (each step emits one token per
+            # running slot; legacy admission prefills inflate the tail)
+            "itl_p50_s": (float(np.percentile(step_s, 50))
+                          if step_s else 0.0),
+            "itl_p95_s": (float(np.percentile(step_s, 95))
+                          if step_s else 0.0),
             "occupancy_mean": (float(np.mean(m["occupancy"]))
                                if m["occupancy"] else 0.0),
             "queue_depth_max": (int(np.max(m["queue_depth"]))
                                 if m["queue_depth"] else 0),
             "quantized_kv": self.quantized_kv,
             "paged": self.paged,
+            "schedule": self.schedule,
             "kv_capacity_bytes": sum(v.nbytes for v in self._cache.values()),
             "resident_kv_bytes_mean": (float(np.mean(
                 m["resident_kv_bytes"])) if m["resident_kv_bytes"] else 0),
@@ -565,6 +477,10 @@ class ServeEngine:
                 "n_pages": self.pool.n_pages,
                 "pages_peak": self.pool.peak_in_use,
                 "prefill_chunk": self.prefill_chunk} if self.paged else {}),
+            **({"max_batch_tokens": self.max_batch_tokens,
+                "packed_tokens_max": max(
+                    (t for t, *_ in self.sched.plan_log), default=0)}
+               if self.schedule == "unified" else {}),
             "mesh": (dict(self.mesh.shape) if self.mesh is not None
                      else None),
         }

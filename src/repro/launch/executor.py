@@ -1,0 +1,377 @@
+"""Device side of the serve stack: jitted/shard_mapped prefill, decode,
+and the unified ragged step, with donated caches.
+
+The engine façade (``repro.launch.engine``) keeps all host-side policy
+(queues, slots, budgets — see ``repro.launch.scheduler``); everything
+that touches a jax array lives here:
+
+- ``LegacyExecutor`` — the prefill-on-admit + batched-decode pair the
+  engine has always dispatched: fused single-dispatch slot prefill,
+  paged prefill spans with donated pools, one batched decode step, and
+  the tensor-parallel shard_map variants of each.
+- ``RaggedExecutor`` — the unified token-budget step: ONE jitted (or
+  shard_mapped) invocation per engine step that runs the flat packed
+  (T, 1) token batch — decode rows and prefill-chunk rows together —
+  against the paged KV pool with per-token positions and page-table
+  rows, returning logits only at the packed rows the scheduler marked
+  (``models.dense.ragged_step``). The cache is donated, so pools update
+  in place on donation-capable backends.
+
+Both executors own ``params`` and ``cache`` (device_put with the
+quantization-aware shardings from ``distributed.sharding`` in mesh mode)
+and expose small host-facing methods taking/returning numpy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------- jit helpers
+
+@functools.lru_cache(maxsize=8)
+def jitted_model_fns(model):
+    """(jit prefill, jit decode) cached per model so repeated engine /
+    oracle runs over the same model share compilations."""
+    return jax.jit(model.prefill), jax.jit(model.decode)
+
+
+@jax.jit
+def _take_slot(cache, slot):
+    """Slice one slot's batch-1 cache out of the shared (L, n_slots, ...)
+    arrays (leaf layout: layer axis 0, slot axis 1)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache)
+
+
+# Donating the shared cache lets XLA write the slot rows in place on
+# backends with buffer donation (TPU); CPU falls back to a copy.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _put_slot(cache, part, slot):
+    return jax.tree.map(
+        lambda a, p: jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1),
+        cache, part)
+
+
+# Single-device admissions run take -> prefill -> put as ONE jitted
+# program: the slot's rows are sliced, prefilled, and written back without
+# the per-slot part ever surfacing as separate host-boundary buffers
+# between three dispatches (the old take/prefill/put ping-pong). The
+# shared cache is donated so XLA can update the slot rows in place.
+# ``prefill_fn`` is static (one compile per model × token shape).
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def _prefill_slot_fused(prefill_fn, params, cache, tokens, slot, logits_at):
+    part = jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache)
+    logits, part = prefill_fn(params, tokens, dict(part, pos=jnp.int32(0)),
+                              logits_at=logits_at)
+    part.pop("pos")
+    cache = jax.tree.map(
+        lambda a, p: jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1),
+        cache, part)
+    return logits, cache
+
+
+# The whole unified step is one jitted program: scatter-write every packed
+# token's k/v, attend, and read logits at the scheduler-marked rows. The
+# cache (the global paged pools) is donated for in-place pool updates;
+# ``step_fn`` (``model.ragged_step``) and the kernel flag are static.
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3,))
+def _unified_step(step_fn, paged_kernel, params, cache, tokens, pos,
+                  page_table, logit_rows, ragged_desc):
+    cache = dict(cache, pos=pos, page_table=page_table)
+    logits, cache = step_fn(params, tokens, cache, logit_rows,
+                            paged_kernel=paged_kernel,
+                            ragged_desc=ragged_desc)
+    cache.pop("pos")
+    cache.pop("page_table")
+    return logits, cache
+
+
+# ------------------------------------------------- shared mesh validation
+
+def _validate_tp(cfg, mesh, tp_axis: str, tp_mode: str, params) -> int:
+    """Shared tensor-parallel admissibility checks (whole heads per
+    shard; int4-packed row shards hold whole bytes). Returns tp size."""
+    from repro.core.qlinear import iter_qlinear
+
+    if cfg.n_experts:
+        raise NotImplementedError("mesh serving covers the dense "
+                                  "(non-MoE) family")
+    tp = mesh.shape[tp_axis]
+    packed = any(l.packed for _, l in iter_qlinear(params))
+    unit = 2 * tp if (packed and tp_mode == "psum") else tp
+    for dim, name in ((cfg.n_heads, "n_heads"),
+                      (cfg.n_kv_heads, "n_kv_heads")):
+        if dim % tp:
+            raise ValueError(
+                f"{name}={dim} must divide by {tp_axis}={tp} (whole "
+                f"heads per shard)")
+    for dim, name in ((cfg.q_dim, "q_dim"), (cfg.d_ff, "d_ff")):
+        if dim % unit:
+            raise ValueError(
+                f"{name}={dim} must divide by {unit} "
+                f"({tp_axis}={tp}"
+                + (", ×2: int4-packed row shards hold whole bytes)"
+                   if unit != tp else ")"))
+    return tp
+
+
+# --------------------------------------------------------- legacy executor
+
+class LegacyExecutor:
+    """Prefill-on-admit + batched-decode dispatch (the engine's original
+    device path, unchanged numerics — it stays the oracle the unified
+    step is golden-tested against)."""
+
+    def __init__(self, model, params, cache, *, n_slots: int,
+                 paged: bool = False, paged_kernel: bool = False,
+                 mesh=None, tp_axis: str = "model",
+                 tp_mode: str = "gather", tp_kernels: bool = False):
+        self.model, self.params, self.cache = model, params, cache
+        self.paged, self.mesh = paged, mesh
+        self.n_slots = n_slots
+        if mesh is None:
+            self._prefill, self._decode = jitted_model_fns(model)
+            if paged:
+                # paged prefill/decode round-trip the ENTIRE global pool
+                # (not a batch-1 slot part), so donate the cache arg —
+                # in-place pool updates on donation-capable backends,
+                # mirroring what _prefill_slot_fused does for slots
+                self._prefill = jax.jit(model.prefill, donate_argnums=(2,))
+                dec = (lambda p, t, c: model.decode(p, t, c,
+                                                    paged_kernel=True)
+                       ) if paged_kernel else model.decode
+                self._decode = jax.jit(dec, donate_argnums=(2,))
+        else:
+            self._init_mesh_fns(mesh, tp_axis, tp_mode, tp_kernels,
+                                paged_kernel)
+
+    def _init_mesh_fns(self, mesh, tp_axis: str, tp_mode: str,
+                       tp_kernels: bool, paged_kernel: bool) -> None:
+        """Tensor-parallel serving: params and the shared slot KV cache
+        are device_put with quantization-aware shardings
+        (``distributed.sharding.tp_param_specs`` / ``tp_cache_specs``) and
+        prefill/decode run the TP forward inside shard_map. Slot
+        bookkeeping (queue, free list, positions) stays host-side in the
+        engine and is identical to the single-device path; in
+        ``tp_mode="gather"`` (default) the decoded tokens are
+        bit-identical to it too."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.compat import shard_map
+        from repro.distributed import sharding as shlib
+
+        cfg = self.model.cfg
+        _validate_tp(cfg, mesh, tp_axis, tp_mode, self.params)
+        dp_axis = next((a for a in ("data", "pod")
+                        if a in mesh.axis_names
+                        and self.n_slots % mesh.shape[a] == 0
+                        and mesh.shape[a] > 1), None)
+        if self.paged and dp_axis is not None:
+            raise NotImplementedError(
+                "paged mesh serving is tensor-parallel only: the page pool "
+                "is a global (not per-slot) allocation, so its writes "
+                "cannot shard over a data axis — use a (1, tp) mesh")
+
+        pspecs = shlib.tp_param_specs(self.params, mesh, axis=tp_axis,
+                                      cfg=cfg, row_mode=tp_mode)
+        dec_cspecs = shlib.tp_cache_specs(self.cache, mesh, axis=tp_axis,
+                                          dp_axis=dp_axis)
+        if self.paged:
+            # prefill sees the same global pool as decode (only the page
+            # table narrows to the admitted slot's row)
+            pre_cspecs = dec_cspecs
+        else:
+            part_shapes = jax.eval_shape(
+                lambda c: jax.tree.map(lambda a: a[:, :1], c), self.cache)
+            pre_cspecs = shlib.tp_cache_specs(part_shapes, mesh,
+                                              axis=tp_axis)
+        self.params = jax.device_put(self.params, shlib.named(pspecs, mesh))
+        self.cache = jax.device_put(self.cache,
+                                    shlib.named(dec_cspecs, mesh))
+        tok_spec = P(dp_axis, None)
+        # the (B,) per-slot position vector shards with the slot axis
+        pos_spec = P(dp_axis) if dp_axis else P()
+        tp_kw = dict(tp_axis=tp_axis, tp_mode=tp_mode, tp_kernels=tp_kernels)
+        if self.paged:
+            # page tables replicate (every shard gathers/scatters its own
+            # head slice of the same physical pages)
+            pt_spec = {"page_table": P(None, None)}
+            pre_extra = dict(pt_spec, pos=P())
+            dec_extra = dict(pt_spec, pos=pos_spec)
+        else:
+            pre_extra, dec_extra = {"pos": P()}, {"pos": pos_spec}
+        model = self.model
+        pk = paged_kernel
+
+        def pre(p, t, c, la):
+            return model.prefill(p, t, c, logits_at=la, **tp_kw)
+
+        def dec(p, t, c):
+            if pk:
+                return model.decode(p, t, c, paged_kernel=True, **tp_kw)
+            return model.decode(p, t, c, **tp_kw)
+
+        self._prefill = jax.jit(shard_map(
+            pre, mesh=mesh,
+            in_specs=(pspecs, P(None, None), dict(pre_cspecs, **pre_extra),
+                      P()),
+            out_specs=(P(None, None, None), dict(pre_cspecs, **pre_extra)),
+            check_vma=False))
+        self._decode = jax.jit(shard_map(
+            dec, mesh=mesh,
+            in_specs=(pspecs, tok_spec, dict(dec_cspecs, **dec_extra)),
+            out_specs=(P(dp_axis, None, None),
+                       dict(dec_cspecs, **dec_extra)),
+            check_vma=False))
+
+    # ----------------------------------------------------------- dispatch
+
+    def prefill_slot(self, toks: np.ndarray, slot: int, last: int):
+        """Slot-cache prefill: fused take->prefill->put in one dispatch
+        (single device) or explicit take/put around the shard_map'd
+        forward (mesh). Returns the prefill logits."""
+        if self.mesh is None:
+            logits, self.cache = _prefill_slot_fused(
+                self.model.prefill, self.params, self.cache, toks[None],
+                np.int32(slot), jnp.int32(last))
+            return logits
+        part = dict(_take_slot(self.cache, np.int32(slot)),
+                    pos=jnp.int32(0))
+        logits, part = self._prefill(self.params, toks[None], part,
+                                     jnp.int32(last))
+        part.pop("pos")
+        self.cache = _put_slot(self.cache, part, np.int32(slot))
+        return logits
+
+    def prefill_paged_span(self, toks: np.ndarray, row, off: int,
+                           last: int):
+        """One paged prefill span at cache offset ``off`` against page
+        table ``row`` (1, n_ptab). Returns (logits, rebound row) — the
+        input row buffer was donated with the cache."""
+        cache = dict(self.cache, page_table=row, pos=jnp.int32(off))
+        if self.mesh is None:
+            logits, cache = self._prefill(self.params, toks[None], cache,
+                                          logits_at=jnp.int32(last))
+        else:
+            logits, cache = self._prefill(self.params, toks[None], cache,
+                                          jnp.int32(last))
+        cache.pop("pos")
+        row = cache.pop("page_table")
+        self.cache = cache
+        return logits, row
+
+    def decode(self, toks: np.ndarray, pos: np.ndarray,
+               table=None) -> np.ndarray:
+        """One batched decode step over all slots; returns logits
+        (n_slots, 1, V) as numpy."""
+        cache = dict(self.cache, pos=jnp.asarray(pos))
+        if table is not None:
+            cache["page_table"] = jnp.asarray(table)
+        logits, cache = self._decode(self.params, jnp.asarray(toks), cache)
+        cache.pop("pos")
+        cache.pop("page_table", None)
+        self.cache = cache
+        return np.asarray(logits)
+
+
+# --------------------------------------------------------- ragged executor
+
+class RaggedExecutor:
+    """The unified token-budget step: one ragged model invocation per
+    engine step over the flat packed token batch (see module docstring
+    and ``scheduler.TokenBudgetScheduler.pack``)."""
+
+    def __init__(self, model, params, cache, *, paged_kernel: bool = False,
+                 mesh=None, tp_axis: str = "model",
+                 tp_mode: str = "gather", tp_kernels: bool = False):
+        if model.ragged_step is None:
+            raise NotImplementedError(
+                f"family {getattr(model.cfg, 'family', '?')!r} has no "
+                f"ragged (unified-step) forward")
+        self.model, self.params, self.cache = model, params, cache
+        self.paged_kernel = paged_kernel
+        self.mesh = mesh
+        if mesh is not None:
+            self._init_mesh(mesh, tp_axis, tp_mode, tp_kernels)
+
+    def _init_mesh(self, mesh, tp_axis: str, tp_mode: str,
+                   tp_kernels: bool) -> None:
+        """Unified step under shard_map: pools shard the head axis on
+        ``model`` exactly as in legacy paged serving; the host-built
+        descriptors (packed tokens, positions, page-table rows, logit
+        rows, kernel query blocks) all replicate
+        (``distributed.sharding.ragged_desc_specs``)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.compat import shard_map
+        from repro.distributed import sharding as shlib
+
+        cfg = self.model.cfg
+        _validate_tp(cfg, mesh, tp_axis, tp_mode, self.params)
+        for a in ("data", "pod"):
+            if a in mesh.axis_names and mesh.shape[a] > 1:
+                raise NotImplementedError(
+                    "unified serving is tensor-parallel only (the paged "
+                    "pool is a global allocation) — use a (1, tp) mesh")
+        pspecs = shlib.tp_param_specs(self.params, mesh, axis=tp_axis,
+                                      cfg=cfg, row_mode=tp_mode)
+        cspecs = shlib.tp_cache_specs(self.cache, mesh, axis=tp_axis)
+        self.params = jax.device_put(self.params, shlib.named(pspecs, mesh))
+        self.cache = jax.device_put(self.cache, shlib.named(cspecs, mesh))
+        cdict = dict(cspecs, pos=P(None), page_table=P(None, None))
+        model = self.model
+        pk = self.paged_kernel
+        tp_kw = dict(tp_axis=tp_axis, tp_mode=tp_mode, tp_kernels=tp_kernels)
+
+        if pk:
+            desc_specs = shlib.ragged_desc_specs(
+                {k: jax.ShapeDtypeStruct((1, 1), jnp.int32)
+                 for k in ("qidx", "qpos", "table")}
+                | {k: jax.ShapeDtypeStruct((1,), jnp.int32)
+                   for k in ("lengths", "inv_seq", "inv_qi")})
+
+            def rag(p, t, c, lr, rd):
+                return model.ragged_step(p, t, c, lr, paged_kernel=True,
+                                         ragged_desc=rd, **tp_kw)
+
+            in_specs = (pspecs, P(None, None), cdict, P(None), desc_specs)
+        else:
+            def rag(p, t, c, lr):
+                return model.ragged_step(p, t, c, lr, **tp_kw)
+
+            in_specs = (pspecs, P(None, None), cdict, P(None))
+        self._mesh_step = jax.jit(shard_map(
+            rag, mesh=mesh, in_specs=in_specs,
+            out_specs=(P(None, None, None), cdict), check_vma=False))
+
+    def step(self, packed: dict) -> np.ndarray:
+        """Run one packed unified step; returns logits (n_slots, 1, V)
+        as numpy (only the first ``packed['n_logits']`` rows are real)."""
+        tokens = jnp.asarray(packed["tokens"])
+        pos = jnp.asarray(packed["pos"])
+        ptab = jnp.asarray(packed["page_table"])
+        lrows = jnp.asarray(packed["logit_rows"])
+        desc = packed.get("ragged_desc")
+        if desc is not None:
+            desc = {k: jnp.asarray(v) for k, v in desc.items()}
+        if self.mesh is None:
+            logits, self.cache = _unified_step(
+                self.model.ragged_step, self.paged_kernel, self.params,
+                self.cache, tokens, pos, ptab, lrows, desc)
+            return np.asarray(logits)
+        cache = dict(self.cache, pos=pos, page_table=ptab)
+        if self.paged_kernel:
+            logits, cache = self._mesh_step(self.params, tokens, cache,
+                                            lrows, desc)
+        else:
+            logits, cache = self._mesh_step(self.params, tokens, cache,
+                                            lrows)
+        cache.pop("pos")
+        cache.pop("page_table")
+        self.cache = cache
+        return np.asarray(logits)

@@ -1,0 +1,321 @@
+"""Host-side serving policy: request types + the unified token-budget
+scheduler.
+
+``TokenBudgetScheduler`` is the vLLM-style planner behind
+``ServeEngine(schedule="unified")``: each engine step it packs up to
+``max_batch_tokens`` of work — one decode token for every running slot
+plus prefill chunks for admitting/in-flight ones — into a single
+:class:`StepPlan` that the device executor (``repro.launch.executor``)
+runs as ONE ragged model invocation. Splitting prompts into
+budget-bounded chunks decouples time-to-first-token of a long admission
+from the inter-token latency of in-flight decodes (no head-of-line
+prefill stall), while the fixed packing width keeps the step at O(1)
+compile shapes.
+
+Everything here is pure host-side bookkeeping (numpy + python); the only
+device-adjacent state it touches is the paged-KV page table
+(``repro.launch.paged``), which it grows/releases exactly like the legacy
+engine does.
+
+Planning order per step (all FIFO-preserving):
+
+1. **decode** — every slot that finished its prompt contributes exactly
+   one token (its last generated token, written at its position). Decode
+   goes first so ITL stays flat regardless of admission pressure;
+   ``max_batch_tokens >= n_slots`` guarantees decodes always fit.
+2. **in-flight prefill** — slots still mid-prompt (admitted on an earlier
+   step) get up to ``min(remaining prompt, remaining budget[,
+   prefill_chunk])`` tokens, oldest admission first.
+3. **admission** — while the queue head fits (free slot, page reservation
+   for its worst case, budget left), pop it and schedule its first
+   chunk. The head never yields to a younger request (head-of-line wait,
+   FIFO preserved — same rule as the legacy paged engine).
+
+Invariants (property-tested in ``tests/test_scheduler_properties.py``):
+every plan's packed token count is <= ``max_batch_tokens``; admission
+order is submission order; no slot is both prefilling and decoding in
+one plan; every admitted request retires exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+# ----------------------------------------------------------- request types
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: ``prompt`` (P,) int32, decode budget."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    submit_time: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray            # (P + G,) prompt followed by G generated
+    prompt_len: int
+    ttft_s: float                 # submit -> first token (prefill) latency
+    admit_step: int
+    retire_step: int
+
+
+@dataclasses.dataclass
+class SeqState:
+    """Unified-mode per-sequence state (the chunked-admission state
+    machine): ``prefill_done`` counts prompt tokens already written to the
+    KV pool; the sequence is *prefilling* until it reaches the prompt
+    length, then *decoding* until retirement."""
+    req: Request
+    slot: int
+    prefill_done: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+    admit_step: int = 0
+    admit_order: int = 0
+    ttft_s: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.req.prompt)
+
+    @property
+    def decoding(self) -> bool:
+        return self.prefill_done >= self.prompt_len
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One step's packed work. ``decode``: (slot, fed token, write pos)
+    triples, one per running slot. ``prefill``: (slot, offset, q_len,
+    tokens) chunks. ``admitted``: (rid, slot) pairs admitted this step.
+    Logits are consumed in packing order: every decode row, then every
+    prefill chunk that *completes* its prompt (``logit_consumers``)."""
+    decode: list = dataclasses.field(default_factory=list)
+    prefill: list = dataclasses.field(default_factory=list)
+    admitted: list = dataclasses.field(default_factory=list)
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.decode) + sum(n for _, _, n, _ in self.prefill)
+
+    @property
+    def logit_consumers(self) -> list:
+        """[("decode"|"first", slot)] aligned with the packed logit rows."""
+        out = [("decode", slot) for slot, _, _ in self.decode]
+        for slot, off, n, toks in self.prefill:
+            if off + n >= self._prompt_lens[slot]:
+                out.append(("first", slot))
+        return out
+
+    # slot -> prompt length, filled by the scheduler (completion test)
+    _prompt_lens: dict = dataclasses.field(default_factory=dict)
+
+
+class TokenBudgetScheduler:
+    """Token-budget packing policy over the paged-KV bookkeeping (see the
+    module docstring for the step algorithm).
+
+    The scheduler owns the FIFO queue, the free-slot list, the active
+    ``SeqState`` map, and the page pool/tables; the engine façade calls
+    ``plan()``, executes the packed step on the device, then feeds the
+    argmax tokens back through ``observe()`` which returns the sequences
+    that retired."""
+
+    def __init__(self, n_slots: int, max_batch_tokens: int, *, pool,
+                 tables, prefill_chunk: int = 0,
+                 eos_id: Optional[int] = None):
+        if max_batch_tokens < n_slots:
+            raise ValueError(
+                f"max_batch_tokens={max_batch_tokens} must be >= "
+                f"n_slots={n_slots} (every running slot decodes one token "
+                f"per step)")
+        self.n_slots = n_slots
+        self.max_batch_tokens = max_batch_tokens
+        self.prefill_chunk = prefill_chunk
+        self.eos_id = eos_id
+        self.pool, self.tables = pool, tables
+        self.queue: deque = deque()
+        self.free = list(range(n_slots))
+        self.active: dict = {}          # slot -> SeqState
+        self._admit_order = 0
+        # lightweight per-step log for invariant tests / benchmarks:
+        # (n_tokens, decode slots, prefill slots, admitted rids)
+        self.plan_log: list = []
+
+    # ------------------------------------------------------------ planning
+
+    def _chunk(self, want: int, budget: int) -> int:
+        n = min(want, budget)
+        if self.prefill_chunk:
+            n = min(n, self.prefill_chunk)
+        return n
+
+    def plan(self, step_idx: int) -> StepPlan:
+        plan = StepPlan()
+        budget = self.max_batch_tokens
+        # 1. decode: one token per running slot (slot order = packing
+        # order, deterministic). Page growth happens here, mirroring the
+        # legacy engine's pre-step ``ensure``.
+        for slot in sorted(self.active):
+            seq = self.active[slot]
+            if not seq.decoding:
+                continue
+            pos = seq.prompt_len + len(seq.generated) - 1
+            self.tables.ensure(slot, pos)
+            plan.decode.append((slot, seq.generated[-1], pos))
+            budget -= 1
+        # 2. in-flight prefill chunks, oldest admission first
+        inflight = sorted((s for s in self.active.values()
+                           if not s.decoding), key=lambda s: s.admit_order)
+        for seq in inflight:
+            if budget <= 0:
+                break
+            n = self._chunk(seq.prompt_len - seq.prefill_done, budget)
+            self.tables.ensure(seq.slot, seq.prefill_done + n - 1)
+            toks = np.asarray(seq.req.prompt[seq.prefill_done:
+                                             seq.prefill_done + n],
+                              np.int32)
+            plan.prefill.append((seq.slot, seq.prefill_done, n, toks))
+            seq.prefill_done += n
+            budget -= n
+        # 3. admission: queue head only (FIFO head-of-line wait)
+        while self.queue and self.free and budget > 0:
+            head = self.queue[0]
+            if not self.tables.can_admit(len(head.prompt)
+                                         + head.max_new_tokens):
+                break
+            slot = min(self.free)       # deterministic: lowest free slot
+            self.free.remove(slot)
+            req = self.queue.popleft()
+            n = self._chunk(len(req.prompt), budget)
+            self.tables.admit(slot, n, budget_tokens=len(req.prompt)
+                              + req.max_new_tokens)
+            seq = SeqState(req, slot, prefill_done=n, admit_step=step_idx,
+                           admit_order=self._admit_order)
+            self._admit_order += 1
+            self.active[slot] = seq
+            plan.admitted.append((req.rid, slot))
+            plan.prefill.append((slot, 0, n,
+                                 np.asarray(req.prompt[:n], np.int32)))
+            budget -= n
+        plan._prompt_lens = {s: seq.prompt_len
+                             for s, seq in self.active.items()}
+        self.plan_log.append((plan.n_tokens,
+                              tuple(s for s, _, _ in plan.decode),
+                              tuple(s for s, _, _, _ in plan.prefill),
+                              tuple(r for r, _ in plan.admitted)))
+        return plan
+
+    # ------------------------------------------------------------- packing
+
+    def pack(self, plan: StepPlan, *, kernel_desc: bool = False) -> dict:
+        """Flatten a plan into the fixed-shape arrays the ragged device
+        step consumes (ONE compile shape per engine): ``tokens`` (T, 1),
+        ``pos`` (T,), ``page_table`` (T, n_ptab) per-token table rows
+        (null rows for padding), ``logit_rows`` (n_slots,) packed-row
+        indices of the logit consumers. ``kernel_desc`` additionally
+        emits the per-work-item query-block descriptors the ragged
+        paged-attention kernel wants (``ragged_desc``)."""
+        T = self.max_batch_tokens
+        n_ptab = self.tables.n_ptab
+        tokens = np.zeros((T,), np.int32)
+        pos = np.zeros((T,), np.int32)
+        slot_of = np.full((T,), -1, np.int32)
+        items = []                      # (slot, start row, q_len, last pos)
+        last_row = {}                   # slot -> its item's last packed row
+        i = 0
+        for slot, tok, p in plan.decode:
+            tokens[i], pos[i], slot_of[i] = tok, p, slot
+            items.append((slot, i, 1, p))
+            last_row[slot] = i
+            i += 1
+        for slot, off, n, toks in plan.prefill:
+            tokens[i:i + n] = toks
+            pos[i:i + n] = off + np.arange(n)
+            slot_of[i:i + n] = slot
+            items.append((slot, i, n, off + n - 1))
+            last_row[slot] = i + n - 1
+            i += n
+        # logit rows derive from the SAME consumer list observe() zips
+        # over — single-sourced so the row/consumer alignment cannot
+        # drift (each consumer reads its slot's last packed row)
+        consumers = plan.logit_consumers
+        logit_rows = np.zeros((self.n_slots,), np.int32)
+        for j, (_kind, slot) in enumerate(consumers):
+            logit_rows[j] = last_row[slot]
+        ptab = np.zeros((T, n_ptab), np.int32)
+        valid = slot_of >= 0
+        ptab[valid] = self.tables.table[slot_of[valid]]
+        packed = {"tokens": tokens[:, None], "pos": pos,
+                  "page_table": ptab, "logit_rows": logit_rows,
+                  "n_logits": len(consumers)}
+        if kernel_desc:
+            packed["ragged_desc"] = self._kernel_desc(items, T, n_ptab)
+        return packed
+
+    def _kernel_desc(self, items, T: int, n_ptab: int) -> dict:
+        """Per-work-item query blocks for the ragged paged-attention
+        kernel: row j holds work item j's packed-row indices and absolute
+        positions (padded with qpos=-1 -> fully masked), its page-table
+        row, and its kv length; ``inv_*`` maps each packed row back to
+        its (item, row-in-item) so the blocked output scatters into the
+        flat layout.
+
+        The block width is the largest q_len any single item can reach —
+        ``prefill_chunk`` when set (a decode item is 1 row), the whole
+        budget otherwise — still a fixed shape per engine config (O(1)
+        compiles) but without padding every item to the full packed
+        width. Set ``prefill_chunk`` alongside ``paged_kernel`` to keep
+        the kernel's masked padding rows small."""
+        R = self.n_slots
+        # block width Q bounds one ITEM's q_len; the inv_* maps stay at
+        # the full packed width T (they are indexed by packed row)
+        q_width = min(T, self.prefill_chunk) if self.prefill_chunk else T
+        qidx = np.zeros((R, q_width), np.int32)
+        qpos = np.full((R, q_width), -1, np.int32)
+        lengths = np.zeros((R,), np.int32)
+        table = np.zeros((R, n_ptab), np.int32)
+        inv_seq = np.zeros((T,), np.int32)
+        inv_qi = np.zeros((T,), np.int32)
+        for j, (slot, start, n, last) in enumerate(items):
+            qidx[j, :n] = start + np.arange(n)
+            qpos[j, :n] = last - n + 1 + np.arange(n)
+            lengths[j] = last + 1
+            table[j] = self.tables.table[slot]
+            inv_seq[start:start + n] = j
+            inv_qi[start:start + n] = np.arange(n)
+        return {"qidx": qidx, "qpos": qpos, "lengths": lengths,
+                "table": table, "inv_seq": inv_seq, "inv_qi": inv_qi}
+
+    # ---------------------------------------------------------- observation
+
+    def _finished(self, seq: SeqState) -> bool:
+        return (len(seq.generated) >= seq.req.max_new_tokens
+                or seq.generated[-1] == self.eos_id)
+
+    def observe(self, plan: StepPlan, toks: np.ndarray, now: float) -> list:
+        """Apply one step's argmax tokens (aligned with
+        ``plan.logit_consumers``); returns the retired ``SeqState``s (slot
+        freed, pages released — the engine turns them into results)."""
+        retired = []
+        for (kind, slot), tok in zip(plan.logit_consumers, toks):
+            seq = self.active[slot]
+            seq.generated.append(int(tok))
+            if kind == "first":
+                seq.ttft_s = now - seq.req.submit_time
+            if self._finished(seq):
+                retired.append(seq)
+                del self.active[slot]
+                self.tables.release(slot)
+                self.free.append(slot)
+        return retired
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active

@@ -7,7 +7,10 @@ CAT-transformed int8/int4-packed weights, dynamic act quant, int8 KV cache.
 
 Requests enter a FIFO queue deeper than the slot count; the engine
 prefills on admit, steps the occupied slots as one batch, and retires /
-reuses slots as requests finish. ``greedy_generate`` stays here as the
+reuses slots as requests finish — or, with ``--schedule unified``, packs
+decode tokens and prefill chunks into one token-budgeted ragged step per
+cycle (``--max-batch-tokens``; flat ITL under long-prompt admission,
+token-identical output). ``greedy_generate`` stays here as the
 static-batch oracle the engine is tested against (token-identical).
 """
 from __future__ import annotations
@@ -108,7 +111,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     n_requests: int = 0, mixed: bool = False,
                     mesh=None, cfg_overrides: Optional[dict] = None,
                     paged: bool = False, page_size: int = 16,
-                    prefill_chunk: int = 0, max_len: int = 0):
+                    prefill_chunk: int = 0, max_len: int = 0,
+                    schedule: str = "legacy", max_batch_tokens: int = 0):
     """Quantize then serve a workload through the engine.
 
     Default (``mixed=False``): ``batch`` uniform-length requests so
@@ -119,7 +123,10 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     token-identical to single-device — see launch/README.md). ``paged``
     swaps the slot cache for the paged KV pool (``page_size`` tokens per
     page; ``prefill_chunk`` feeds prompts through in fixed chunks so
-    prefill compiles once) — token-identical to the slot engine."""
+    prefill compiles once) — token-identical to the slot engine.
+    ``schedule="unified"`` packs decode tokens + prefill chunks into one
+    token-budgeted ragged step per cycle (``max_batch_tokens``) —
+    token-identical again, with flat ITL under long-prompt admission."""
     cfg, model, params, mem = build_served_model(
         arch, transform, w_bits, a_bits, kv_bits, smoke, seed,
         cfg_overrides=cfg_overrides)
@@ -136,7 +143,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     engine = ServeEngine(model, params, n_slots=n_slots or batch,
                          max_len=max_len or max_prompt + gen + 8, mesh=mesh,
                          paged=paged, page_size=page_size,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk, schedule=schedule,
+                         max_batch_tokens=max_batch_tokens)
     results = engine.run(requests)
     summary = engine.summary()
     out = {
@@ -151,6 +159,47 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
         out["tokens"] = np.stack([results[i].tokens
                                   for i in range(n_requests)])
     return out
+
+
+def validate_flags(ap: argparse.ArgumentParser, args) -> None:
+    """Flag admissibility checks, surfaced as argparse errors that name
+    the offending flag(s) and the violated constraint — never bare
+    asserts or deep-stack ValueErrors."""
+    from repro.models.layers import KV_QUANT_GROUP
+
+    unified = args.schedule == "unified"
+    if (args.page_size != 16 or args.prefill_chunk) and not (args.paged
+                                                             or unified):
+        ap.error("--page-size/--prefill-chunk need --paged (or --schedule "
+                 "unified, which serves from the paged pool)")
+    if args.page_size < 1:
+        ap.error(f"--page-size must be >= 1 (got {args.page_size})")
+    if args.kv_bits and args.page_size % KV_QUANT_GROUP:
+        ap.error(f"--page-size must be a multiple of the KV quant scale "
+                 f"group (got {args.page_size}, group {KV_QUANT_GROUP})")
+    if args.prefill_chunk < 0:
+        ap.error(f"--prefill-chunk must be >= 0 (got {args.prefill_chunk})")
+    if args.prefill_chunk and args.prefill_chunk % args.page_size \
+            and not unified:
+        ap.error(f"--prefill-chunk must be a multiple of --page-size "
+                 f"(got {args.prefill_chunk}, page {args.page_size}); "
+                 f"legacy chunks write whole pages — only --schedule "
+                 f"unified slices chunks freely")
+    if args.max_batch_tokens and not unified:
+        ap.error(f"--max-batch-tokens needs --schedule unified "
+                 f"(got {args.max_batch_tokens} with --schedule "
+                 f"{args.schedule})")
+    if args.max_batch_tokens and args.max_batch_tokens < args.batch:
+        ap.error(f"--max-batch-tokens must be >= --n-slots (got "
+                 f"{args.max_batch_tokens}, slots {args.batch}; every "
+                 f"running slot decodes one token per step)")
+    if unified and args.mesh:
+        dp = args.mesh.split(",")[0]
+        if dp.strip() not in ("", "1"):
+            ap.error(f"--schedule unified is tensor-parallel only — use "
+                     f"--mesh 1,tp (got --mesh {args.mesh}; the paged "
+                     f"pool is a global allocation and cannot shard over "
+                     f"a data axis)")
 
 
 def main() -> None:
@@ -184,11 +233,19 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="feed prompts through prefill in fixed chunks of "
                          "this many tokens — ONE prefill compile total "
-                         "(multiple of --page-size; needs --paged)")
+                         "(multiple of --page-size; needs --paged); in "
+                         "unified mode, a cap on per-step prefill chunks")
+    ap.add_argument("--schedule", default="legacy",
+                    choices=["legacy", "unified"],
+                    help="unified: pack decode tokens + prefill chunks "
+                         "into one token-budgeted ragged step per cycle "
+                         "(implies the paged KV pool)")
+    ap.add_argument("--max-batch-tokens", type=int, default=0,
+                    help="unified-schedule token budget per step "
+                         "(>= --n-slots; default 2×slots)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
-    if (args.page_size != 16 or args.prefill_chunk) and not args.paged:
-        ap.error("--page-size/--prefill-chunk need --paged")
+    validate_flags(ap, args)
     out = serve_benchmark(arch=args.arch, batch=args.batch,
                           prompt_len=args.prompt_len, gen=args.gen,
                           transform=args.transform, w_bits=args.w_bits,
@@ -196,22 +253,31 @@ def main() -> None:
                           kv_bits=args.kv_bits, n_requests=args.requests,
                           mixed=args.mixed, mesh=parse_mesh(args.mesh),
                           paged=args.paged, page_size=args.page_size,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          schedule=args.schedule,
+                          max_batch_tokens=args.max_batch_tokens)
     eng = out["engine"]
     mesh_note = (f", mesh={eng['mesh']}" if eng.get("mesh") else "")
-    paged_note = ""
-    if eng.get("paged"):
-        paged_note = (f", paged[{eng['page_size']}t/page, "
-                      f"{eng['resident_kv_bytes_mean'] / 2**10:.0f}KiB "
-                      f"resident vs {eng['kv_capacity_bytes'] / 2**10:.0f}"
-                      f"KiB slot-equivalent]")
+    sched_note = ""
+    if eng.get("schedule") == "unified":
+        sched_note = (f", unified[{eng['max_batch_tokens']}t budget, "
+                      f"itl p95 {eng['itl_p95_s'] * 1e3:.0f}ms]")
+    # KV footprint in BOTH modes (slot-vs-paged rows compare like for
+    # like): paged resident bytes track live pages, the slot cache
+    # reserves its full capacity up front
+    kv_note = (f", paged[{eng['page_size']}t/page, "
+               f"{eng['resident_kv_bytes_mean'] / 2**10:.0f}KiB "
+               f"resident vs {eng['kv_capacity_bytes'] / 2**10:.0f}"
+               f"KiB slot-equivalent]") if eng.get("paged") else (
+               f", slot[{eng['resident_kv_bytes_mean'] / 2**10:.0f}KiB "
+               f"resident = capacity]")
     print(f"{out['arch']} [{out['transform']}]: "
           f"{out['tok_per_s']:.1f} tok/s ({out['wall_s']:.2f}s wall) | "
           f"{eng['n_requests']} reqs on {eng['n_slots']} slots, "
           f"ttft {eng['ttft_s_mean'] * 1e3:.0f}ms, "
           f"occupancy {eng['occupancy_mean']:.2f}, "
           f"kv={'int8' if eng['quantized_kv'] else 'fp'}"
-          f"{paged_note}{mesh_note}")
+          f"{kv_note}{sched_note}{mesh_note}")
     if out.get("qlinear_layers"):
         kind = "int4-packed" if out["packed_int4"] else "int8"
         print(f"  weights: {out['weight_bytes'] / 2**20:.2f} MiB across "

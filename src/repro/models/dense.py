@@ -92,7 +92,8 @@ def init(cfg, rng) -> dict:
 def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
                 taps=None, layer_idx=None, tp_axis=None,
                 tp_mode: str = "gather", tp_kernels=False,
-                page_table=None, paged_kernel: bool = False):
+                page_table=None, paged_kernel: bool = False,
+                ragged_desc=None):
     """cache_sl: per-layer cache slices dict ({"k","v"[,"k_scale","v_scale"]})
     or None. Returns (x, new_cache_sl, aux).
 
@@ -164,8 +165,24 @@ def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
                 cache_sl["v_scale"], k, v, page_table, pos,
                 cfg.kv_quant_bits)
             new_cache_sl = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
-            if paged_kernel and s == 1 and window is None \
-                    and not cfg.attn_softcap:
+            use_kernel = (paged_kernel and s == 1 and window is None
+                          and not cfg.attn_softcap)
+            if use_kernel and ragged_desc is not None:
+                # unified ragged step: regroup the flat packed rows into
+                # per-work-item query blocks so every sequence's pages
+                # stream ONCE for all its prefill-chunk + decode queries
+                # (one kernel launch covers the whole mixed batch)
+                from repro.kernels import ops
+                kvh = ck.shape[2]
+                qf = q.reshape(b, kvh, q.shape[2] // kvh, cfg.head_dim)
+                qb = qf[ragged_desc["qidx"]]     # (R, Q, KVH, g, hd)
+                ob = ops.ragged_paged_attention(
+                    qb, ck, cks, cv, cvs, ragged_desc["table"],
+                    ragged_desc["lengths"].astype(jnp.int32),
+                    ragged_desc["qpos"].astype(jnp.int32))
+                o = ob[ragged_desc["inv_seq"], ragged_desc["inv_qi"]]
+                o = o.reshape(b, 1, -1)
+            elif use_kernel:
                 # decode fast path: stream int8 pages, dequant in VMEM
                 # (rtol-level vs the gathered logical view, not bitwise)
                 from repro.kernels import ops
@@ -244,7 +261,7 @@ def _tap(taps, layer_idx, name, x):
 def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
             taps=None, unroll: bool = False, tp_axis=None,
             tp_mode: str = "gather", tp_kernels: bool = False,
-            paged_kernel: bool = False):
+            paged_kernel: bool = False, ragged_desc=None):
     """-> (hidden (B, S, D), aux_loss, new_cache). ``tokens`` (B, S) int32;
     ``extra_embed`` (B, P, D) is prepended (vlm prefix); with ``cache`` the
     attention runs against the cache and writes k/v at cache['pos'].
@@ -254,7 +271,11 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
     the table ((B, n_ptab) int32) maps each row's logical positions to
     physical pages (see ``init_paged_cache`` / ``models.layers``).
     ``paged_kernel`` opts decode steps into the Pallas paged-attention
-    kernel (quantized pools only; rtol-level numerics).
+    kernel (quantized pools only; rtol-level numerics). A *ragged*
+    (unified-step) batch — flat packed rows, per-token (B,) ``pos`` and
+    (B, n_ptab) table rows, see ``ragged_step`` — may also pass
+    ``ragged_desc`` (per-work-item query-block descriptors) so the
+    kernel streams each sequence's pages once for all its queries.
 
     ``tp_axis`` names a mesh axis when the forward runs inside shard_map
     with params sharded per ``distributed.sharding.tp_param_specs`` (same
@@ -299,7 +320,8 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
                                     tp_axis=tp_axis, tp_mode=tp_mode,
                                     tp_kernels=tp_kernels,
                                     page_table=page_table,
-                                    paged_kernel=paged_kernel)
+                                    paged_kernel=paged_kernel,
+                                    ragged_desc=ragged_desc)
             aux = aux + a
             if csl is not None:
                 new_sl.append(csl)
@@ -318,7 +340,8 @@ def forward(cfg, params, tokens, *, extra_embed=None, cache=None,
                                     tp_axis=tp_axis, tp_mode=tp_mode,
                                     tp_kernels=tp_kernels,
                                     page_table=page_table,
-                                    paged_kernel=paged_kernel)
+                                    paged_kernel=paged_kernel,
+                                    ragged_desc=ragged_desc)
             return (x, aux + a), csl
 
         if cfg.remat:
@@ -408,3 +431,30 @@ def decode(cfg, params, token, cache, **fwd_kw):
     """token (B, 1) -> (logits (B, 1, V), cache)."""
     hidden, _, cache = forward(cfg, params, token, cache=cache, **fwd_kw)
     return logits_fn(cfg, params, hidden), cache
+
+
+def ragged_step(cfg, params, tokens, cache, logit_rows, **fwd_kw):
+    """Unified token-budget step: ONE forward over a flat ragged batch of
+    mixed prefill-chunk and decode rows (``repro.launch.scheduler``).
+
+    ``tokens`` (T, 1) packed rows — each row is one token of some
+    sequence; ``cache`` holds the paged pools plus per-token ``pos``
+    (T,) absolute positions and ``page_table`` (T, n_ptab) — every row
+    carries its own slot's table row, so the existing paged scatter
+    writes each token's k/v to its sequence's pages and the gathered
+    logical view gives each query row exactly its own sequence's KV
+    (padding rows ride the null table row -> inert writes, discarded
+    reads). Intra-chunk causality needs no special casing: all packed
+    rows write k/v before attention, and the causal ``q_pos >= kv_pos``
+    test masks same-chunk future tokens — per-row numerics are bitwise
+    identical to the legacy prefill/decode dispatches.
+
+    ``logit_rows`` (R,) generalizes prefill's ``logits_at`` to the
+    ragged batch: logits are computed only at those packed rows (the
+    scheduler marks each decode row and each prompt-completing chunk's
+    last row; padding entries are discarded by the caller) — the unembed
+    cost scales with sequences, not packed tokens.
+    -> (logits (R, 1, V), cache)."""
+    hidden, _, cache = forward(cfg, params, tokens, cache=cache, **fwd_kw)
+    sel = jnp.take(hidden[:, 0], logit_rows, axis=0)[:, None]
+    return logits_fn(cfg, params, sel), cache

@@ -28,6 +28,10 @@ class Model:
     # (n_pages, page_size) -> paged KV pool; None for families without a
     # paged decode path (ssm/hybrid/encdec keep recurrent or dense state)
     init_paged_cache: Optional[Callable] = None
+    # (params, tokens (T,1), cache, logit_rows) -> (logits (R,1,V), cache):
+    # the unified token-budget step over a flat ragged batch of mixed
+    # prefill-chunk + decode rows (None for families without one)
+    ragged_step: Optional[Callable] = None
 
 
 _FAMILIES = {
@@ -55,6 +59,10 @@ def build(cfg) -> Model:
             (lambda n_pages, page_size: mod.init_paged_cache(
                 cfg, n_pages, page_size))
             if hasattr(mod, "init_paged_cache") else None),
+        ragged_step=(
+            (lambda params, tokens, cache, logit_rows, **kw:
+             mod.ragged_step(cfg, params, tokens, cache, logit_rows, **kw))
+            if hasattr(mod, "ragged_step") else None),
     )
 
 

@@ -55,15 +55,22 @@ def build_case(name: str):
     return cfg, build(cfg), params
 
 
-def run_case(name: str) -> dict:
-    """Drain the seeded workload through the engine -> {rid: [tokens]}."""
+def run_case(name: str, **engine_kw) -> dict:
+    """Drain the seeded workload through the engine -> {rid: [tokens]}.
+
+    ``engine_kw`` forwards to ``ServeEngine`` so the bitwise tests can
+    replay the same fixture workload through every serving configuration
+    (paged, chunked, unified token-budget, mesh) — the fixtures
+    themselves are always regenerated with the default (legacy, slot
+    cache) engine."""
     from repro.data import request_workload
     from repro.launch.engine import ServeEngine
 
     cfg, model, params = build_case(name)
     reqs = request_workload(cfg, N_REQUESTS, gen=GEN, lengths=LENGTHS,
                             seed=SEED)
-    engine = ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN)
+    engine = ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                         **engine_kw)
     results = engine.run(reqs)
     return {str(r["rid"]): np.asarray(results[r["rid"]].tokens).tolist()
             for r in reqs}
