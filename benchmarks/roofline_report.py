@@ -33,6 +33,87 @@ HBM_BW = 819e9            # B/s per chip
 ICI_BW = 50e9             # B/s per link
 CHIPS = 256               # single-pod 16x16
 
+CD_BYTES = 2              # compute dtype (bf16)
+ACT_CODE_BYTES = 1        # int8 activation codes
+
+
+def hot_path_bytes_per_token(cfg, w_bits: int = 4,
+                             fused: bool = True) -> dict:
+    """Analytic HBM bytes per decoded token of the dense serving hot
+    path (§Serving) — the per-layer quantized linears (wq/wk/wv, wo,
+    wg/wu, wd) plus the fp LM head. Stream accounting, per linear
+    (d_in, d_out), per token:
+
+    weights — the dominant term at batch 1:
+      * fused (single-launch kernel OR the ``w_eff``-prepared portable
+        path): the stored codes cross HBM once — w_bits/8 B per element
+        for the Pallas kernel (nibbles unpack in VMEM), CD_BYTES for the
+        prebuilt ``w_eff`` copy. We charge the kernel number; pass
+        ``fused=False`` for the pre-PR path.
+      * unfused: every step unpacks (int8 write + read, packed only) and
+        dequantizes (CD write + matmul read) a fresh weight copy on top
+        of reading the stored codes.
+
+    activations — fused reads x once and writes y once; the unfused
+    chain makes ~4 extra round trips over x (block-diag out, two
+    Hadamard dot stages, quant codes), each an HBM write + read at
+    CD_BYTES (codes at 1 B).
+
+    fp weights (w_bits=0) read CD_BYTES per element either way; the
+    'fused' savings there are dispatch/activation-traffic only.
+    Returns {"weight_bytes", "act_bytes", "total"} per token."""
+    d, f = cfg.d_model, cfg.d_ff
+    linears = [(d, cfg.q_dim), (d, cfg.kv_dim), (d, cfg.kv_dim),
+               (cfg.q_dim, d)]
+    linears += [(d, f), (d, f), (f, d)] if cfg.gated_mlp else [(d, f),
+                                                               (f, d)]
+    w_elem = sum(di * do for di, do in linears) * cfg.n_layers
+    if not w_bits:
+        w_bytes_per_elem = float(CD_BYTES)
+    elif fused:
+        w_bytes_per_elem = w_bits / 8.0
+    else:
+        unpack = 2.0 if w_bits == 4 else 0.0         # int8 write + read
+        w_bytes_per_elem = w_bits / 8.0 + unpack + 2.0 * CD_BYTES
+    weight_bytes = w_elem * w_bytes_per_elem
+    weight_bytes += cfg.d_model * cfg.vocab * CD_BYTES   # fp LM head
+    act = 0.0
+    for di, do in linears:
+        if fused or not w_bits:
+            act += (di + do) * CD_BYTES
+        else:
+            act += di * (7 * CD_BYTES + 2 * ACT_CODE_BYTES) + do * CD_BYTES
+    act *= cfg.n_layers
+    return {"weight_bytes": weight_bytes, "act_bytes": act,
+            "total": weight_bytes + act}
+
+
+def serve_bytes_table(arch: str = "catlm_60m", smoke: bool = True) -> str:
+    """Per-token HBM traffic of the serving hot path, fused vs unfused,
+    at the bench's weight widths — the roofline context for the
+    serve_bench tok/s rows (``python -m benchmarks.roofline_report
+    --serve-bytes``)."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    hdr = (f"{'variant':14s} {'w_kiB/tok':>10s} {'act_kiB/tok':>12s} "
+           f"{'total_kiB':>10s} {'vs fp':>6s}")
+    lines = [f"serving hot-path HBM bytes/token — {arch}"
+             f"{' (smoke)' if smoke else ''}", hdr, "-" * len(hdr)]
+    fp = hot_path_bytes_per_token(cfg, w_bits=0)
+    for name, w_bits, fused in (("fp", 0, True),
+                                ("int8 unfused", 8, False),
+                                ("int8 fused", 8, True),
+                                ("int4 unfused", 4, False),
+                                ("int4 fused", 4, True)):
+        b = hot_path_bytes_per_token(cfg, w_bits=w_bits, fused=fused)
+        lines.append(f"{name:14s} {b['weight_bytes'] / 2**10:10.1f} "
+                     f"{b['act_bytes'] / 2**10:12.2f} "
+                     f"{b['total'] / 2**10:10.1f} "
+                     f"{b['total'] / fp['total']:6.2f}")
+    return "\n".join(lines)
+
 
 def model_flops(arch: str, shape: str, n_params: float,
                 n_active: float) -> float:
@@ -208,8 +289,14 @@ def main() -> None:
     ap.add_argument("--measure", action="store_true")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
+    ap.add_argument("--serve-bytes", action="store_true",
+                    help="print the analytic serving hot-path HBM "
+                         "bytes/token table (fused vs unfused) and exit")
     args = ap.parse_args()
 
+    if args.serve_bytes:
+        print(serve_bytes_table(args.arch or "catlm_60m"))
+        return
     if args.measure:
         measure_cells(args.cells,
                       archs=[args.arch] if args.arch else None,

@@ -29,6 +29,15 @@ class QLinear:
                                   # int4-packed: (ceil(d_in/2), d_out), two nibbles/byte
     scale: jnp.ndarray            # f32, (1, d_out)
     transform: Any                # transform pytree acting on the input dim
+    # Serving-only precomputes, None outside serving params
+    # (``make_serving`` fills them; ``dense`` dispatches on ``colsum``):
+    # colsum — Σ_k qweight[k, n] (f32, (..., 1, d_out)) for the fused
+    # integer-accumulation zero-point epilogue;
+    # w_eff — the dequantized compute-dtype weight (codes·scale, exactly
+    # the tensor the portable path rebuilds from codes every step),
+    # materialized once at build time for the off-TPU XLA hot path.
+    colsum: Optional[jnp.ndarray] = None
+    w_eff: Optional[jnp.ndarray] = None
     act_bits: int = 4             # static: dynamic per-token act quant bits (0 = off)
     w_bits: int = 8               # bit width of the stored weight codes
     d_in: int = 0                 # unpacked input dim when int4-packed; 0 = unpacked
@@ -39,7 +48,8 @@ class QLinear:
 
 
 jax.tree_util.register_dataclass(
-    QLinear, data_fields=["qweight", "scale", "transform"],
+    QLinear, data_fields=["qweight", "scale", "transform", "colsum",
+                          "w_eff"],
     meta_fields=["act_bits", "w_bits", "d_in"]
 )
 
@@ -76,6 +86,8 @@ def dense(p, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
     """y = x @ V (fp) or the quantized equivalent (transform -> dyn act
     quant -> int8-weight matmul with dequant)."""
     if isinstance(p, QLinear):
+        if p.colsum is not None and p.act_bits:
+            return dense_fused(p, x, compute_dtype)
         cd = compute_dtype or x.dtype
         x = T.apply(p.transform, x)
         if p.act_bits:
@@ -84,6 +96,110 @@ def dense(p, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
         return x.astype(cd) @ w
     cd = compute_dtype or x.dtype
     return x @ p.astype(cd)
+
+
+def dense_fused(p: QLinear, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
+    """Serving hot path for QLinears prepared by ``make_serving``.
+
+    Three routes, fastest applicable first:
+
+    1. **TPU + decomposable transform** — the single-launch Pallas fused
+       kernel (``ops.fused_cat_matmul``): transform + quant + W4A8 in
+       one grid, activations cross HBM once (rtol-level numerics).
+    2. **``w_eff`` present (off-TPU default)** — the portable fake-quant
+       matmul against the build-time dequantized weight. Bitwise
+       IDENTICAL to ``dense`` on unprepared params (same transform, same
+       quantize call, same matmul on the same weight values) — it just
+       skips rebuilding codes·scale from (packed) storage every step.
+    3. **integer accumulation** — real activation codes against stored
+       codes with the precomputed-``colsum`` zero-point epilogue:
+       y = s_x·s_w·(q_x @ q_w − zp_x·Σ_k q_w). Mathematically the exact
+       dequantized product (int32 accumulation), but NOT bitwise equal
+       to route 2 (the portable path rounds the dequantized activation/
+       weight to the compute dtype before its matmul)."""
+    cd = compute_dtype or x.dtype
+    lead, d = x.shape[:-1], x.shape[-1]
+    if _use_fused_kernel() and p.act_bits:
+        from repro.kernels import ops
+        dec = ops.fused_transform_operands(p.transform)
+        if dec is not None:
+            blocks, ha, hb, sign = dec
+            y = ops.fused_cat_matmul(x.reshape(-1, d), blocks, ha, hb,
+                                     sign, p.qweight, p.scale,
+                                     act_bits=p.act_bits, packed=p.packed)
+            return y.reshape(*lead, y.shape[-1]).astype(cd)
+    xt = T.apply(p.transform, x)
+    if p.w_eff is not None:
+        if p.act_bits:
+            xt = fake_quant(xt, act_spec(p.act_bits))
+        return xt.astype(cd) @ p.w_eff.astype(cd)
+    from .quantizers import quantize
+    xf = xt.reshape(-1, d)
+    q, s, zp = quantize(xf, act_spec(p.act_bits))
+    acc = jnp.dot(q.astype(jnp.int32),
+                  unpacked_qweight(p).astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    y = s * p.scale * (acc.astype(jnp.float32) - zp * p.colsum)
+    return y.reshape(*lead, y.shape[-1]).astype(cd)
+
+
+def _gemv_m() -> int:
+    from repro.kernels.quant_matmul_w4 import _GEMV_M
+    return _GEMV_M
+
+
+def _use_fused_kernel() -> bool:
+    """Route ``dense_fused`` through the single-launch Pallas kernel only
+    on a real TPU backend — interpreted Pallas on CPU runs the kernel
+    body in Python and would be slower than the XLA integer path, and
+    the golden fixtures pin the XLA path's bitwise behaviour on CPU."""
+    return jax.default_backend() == "tpu"
+
+
+def make_serving(p: QLinear, keep_packed: Optional[bool] = None,
+                 compute_dtype=None) -> QLinear:
+    """Prepare one QLinear for the fused serving hot path: precompute the
+    weight-code column sums for the zero-point epilogue and — off-TPU,
+    where ``dense_fused`` runs the portable fake-quant matmul — the
+    dequantized compute-dtype weight ``w_eff`` once at build time, so no
+    step ever unpacks nibbles or rebuilds codes·scale again. ``w_eff``
+    holds exactly the tensor the unprepared path materializes per call,
+    keeping the off-TPU hot path bitwise identical to ``dense``.
+
+    ``keep_packed=None`` keeps packed-only storage exactly when the
+    Pallas fused kernel (which unpacks in VMEM) will serve the layer."""
+    if keep_packed is None:
+        keep_packed = _use_fused_kernel()
+    w = unpacked_qweight(p)
+    colsum = jnp.sum(w.astype(jnp.float32), axis=-2, keepdims=True)
+    if keep_packed:
+        return dataclasses.replace(p, colsum=colsum)
+    cd = compute_dtype or jnp.float32
+    w_eff = w.astype(cd) * p.scale.astype(cd)
+    return dataclasses.replace(p, colsum=colsum, w_eff=w_eff)
+
+
+def concat_out(ps, keep_packed: Optional[bool] = None, compute_dtype=None):
+    """Column-concatenate linears that consume the SAME input into one
+    (d_in, Σ d_out) linear — exact: each output column depends on one
+    member only. For QLinears this additionally requires identical meta
+    and a shared input transform (guaranteed for pipeline group members,
+    which quantize against one group transform); the concat keeps the
+    first member's transform and goes through ``make_serving``. Returns
+    None when the members aren't uniformly concatenable."""
+    if all(isinstance(p, jnp.ndarray) for p in ps):
+        return jnp.concatenate(ps, axis=-1)
+    if not all(isinstance(p, QLinear) for p in ps):
+        return None
+    head = ps[0]
+    if any((p.act_bits, p.w_bits, p.d_in) !=
+           (head.act_bits, head.w_bits, head.d_in) for p in ps[1:]):
+        return None
+    cat = dataclasses.replace(
+        head,
+        qweight=jnp.concatenate([p.qweight for p in ps], axis=-1),
+        scale=jnp.concatenate([p.scale for p in ps], axis=-1))
+    return make_serving(cat, keep_packed, compute_dtype)
 
 
 def dense_tp(p, x: jnp.ndarray, axis: str, compute_dtype=None,

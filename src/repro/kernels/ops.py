@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from .block_matmul import block_diag_matmul
 from .dynamic_quant import dynamic_quant
+from .fused_cat_matmul import fused_cat_gemv_w4, fused_cat_matmul_w4
 from .hadamard import hadamard_transform
 from .paged_attention import (paged_attention_decode,
                               paged_attention_fallback,
@@ -100,6 +101,110 @@ def cat_transform_matmul(x, blocks, ha, hb, sign, qw, sw,
     if axis_name is not None:
         y = jax.lax.psum(y, axis_name)
     return y.reshape(*lead, qw.shape[1]).astype(x.dtype)
+
+
+def fused_transform_operands(t):
+    """Decompose a CAT transform pytree into the fused kernel's
+    ``(blocks, ha, hb, sign)`` operands, or None when it doesn't fit.
+
+    Supported shapes (exactly what ``transforms.make_cat_block`` /
+    ``make_hadamard`` build): a bare ``Hadamard``, or a ``Compose`` of
+    (``Scale`` | ``BlockDiag``, ``Hadamard``). A diagonal ``Scale``
+    factor folds into the pre-Hadamard sign vector (both are elementwise,
+    so they commute). Anything else — ``Dense``, bare block transforms
+    without a Hadamard stage, nested composes — returns None and the
+    caller uses the composed per-kernel path.
+    """
+    from repro.core import transforms as T
+
+    if isinstance(t, T.Hadamard):
+        return None, t.ha, t.hb, t.sign
+    if not isinstance(t, T.Compose) or len(t.parts) != 2:
+        return None
+    first, had = t.parts
+    if not isinstance(had, T.Hadamard):
+        return None
+    if isinstance(first, T.Scale):
+        return None, had.ha, had.hb, had.sign * first.s
+    if isinstance(first, T.BlockDiag):
+        return first.blocks, had.ha, had.hb, had.sign
+    if isinstance(first, T.Identity):
+        return None, had.ha, had.hb, had.sign
+    return None
+
+
+def fused_cat_matmul(x, blocks, ha, hb, sign, qw, sw, act_bits: int = 8,
+                     packed: bool = True, axis_name=None, **kw):
+    """Single-launch serving linear: y ≈ W·T⁻¹·Q(T x) with the whole
+    transform -> quant -> W4A8 chain fused into one Pallas kernel
+    (``kernels/fused_cat_matmul.py``): the activation tile crosses HBM
+    once and the (packed) weight is the only other stream.
+
+    Operands as in ``fused_cat_matmul_w4`` (get them from a transform
+    pytree via ``fused_transform_operands``); ``packed=False`` contracts
+    (D, N) int8 weight codes instead of nibble-packed int4. Block sizes
+    come from the per-shape autotune cache (``kernels/autotune.py``)
+    unless passed explicitly.
+
+    ``axis_name`` marks a call from inside shard_map on a K-sharded mesh
+    axis. The transform and per-token quant scales span the full feature
+    dim, so they cannot tile with a K shard — the tp path composes the
+    stand-alone kernels (global transform + quant, local K-slice
+    contraction, exact psum) just like ``cat_transform_matmul``.
+    """
+    from . import autotune
+
+    kw.setdefault("interpret", default_interpret())
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    if axis_name is not None:
+        if blocks is not None:
+            xf = block_matmul(xf, blocks, **kw)
+            xf = hadamard(xf, ha, hb, sign, **kw)
+        else:
+            xf = hadamard(xf * sign.astype(xf.dtype), ha, hb, None, **kw)
+        qx, sx, zpx = dyn_quant(xf, bits=act_bits, symmetric=False, **kw)
+        k_local = qw.shape[0] * 2 if packed else qw.shape[0]
+        if packed:
+            assert d % 2 == 0, "sharded packed serving needs even K"
+        idx = jax.lax.axis_index(axis_name)
+        qx = jax.lax.dynamic_slice_in_dim(qx, idx * k_local, k_local, axis=1)
+        if not packed:
+            y = qmatmul(qx, sx, zpx, qw, sw, **kw)
+        elif qx.shape[0] <= _GEMV_M:
+            y = qgemv_w4(qx, sx, zpx, qw, sw, **kw)
+        else:
+            y = qmatmul_w4(qx, sx, zpx, qw, sw, **kw)
+        y = jax.lax.psum(y, axis_name)
+        return y.reshape(*lead, qw.shape[1]).astype(x.dtype)
+    m, n = xf.shape[0], qw.shape[1]
+    if xf.shape[0] <= _GEMV_M:
+        if "block_n" not in kw or "block_k" not in kw:
+            tn, tk = autotune.gemv_blocks(d, n, packed)
+            kw.setdefault("block_n", tn)
+            kw.setdefault("block_k", tk)
+        y = fused_cat_gemv_w4(xf, blocks, ha, hb, sign, qw, sw,
+                              act_bits=act_bits, packed=packed, **kw)
+    else:
+        if not {"block_m", "block_n", "block_k"} <= kw.keys():
+            m_bucket = 1 << max(3, (m - 1).bit_length())
+            key = ("fused", m_bucket, d, n, packed, kw["interpret"])
+
+            def run(cand):
+                tm, tn, tk = cand
+                fused_cat_matmul_w4(
+                    xf, blocks, ha, hb, sign, qw, sw, act_bits=act_bits,
+                    packed=packed, block_m=tm, block_n=tn, block_k=tk,
+                    interpret=kw["interpret"]).block_until_ready()
+
+            tm, tn, tk = autotune.pick(key, m, d, n, packed, run=run)
+            kw.setdefault("block_m", tm)
+            kw.setdefault("block_n", tn)
+            kw.setdefault("block_k", tk)
+        y = fused_cat_matmul_w4(xf, blocks, ha, hb, sign, qw, sw,
+                                act_bits=act_bits, packed=packed, **kw)
+    return y.reshape(*lead, n).astype(x.dtype)
 
 
 def paged_attention(q, k_pages, k_scale, v_pages, v_scale, page_table,

@@ -155,3 +155,26 @@ def fused_hadamard_quant(x, ha, hb, sign, bits: int = 8):
     """Online-transform hot path: Hadamard then per-token dynamic quant."""
     y = hadamard_transform(x, ha, hb, sign)
     return dynamic_quant(y, bits=bits, symmetric=False)
+
+
+def fused_cat_matmul_w4(x, blocks, ha, hb, sign, qw, sw, *,
+                        act_bits: int = 8, packed: bool = True,
+                        out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for the single-launch fused serving chain
+    (``kernels.fused_cat_matmul``): block-CAT -> (sign ⊙) Hadamard ->
+    dynamic per-token asymmetric quant -> W4A8 (or W8A8 with
+    ``packed=False``) matmul with the zero-point epilogue.
+
+    x (M, D) fp; blocks (n, k, k) or None; sign (D,) combined elementwise
+    vector (Hadamard sign with any Scale CAT factor folded in); qw
+    (ceil(D/2), N) packed int4 codes or (D, N) int8 codes; sw (1, N) f32.
+    Composes the stand-alone oracles above, so agreement with the fused
+    kernel is rtol-level (dot association differs), not bitwise.
+    """
+    xf = x.astype(jnp.float32)
+    if blocks is not None:
+        xf = block_diag_matmul(xf, blocks)
+    q, s, zp = fused_hadamard_quant(xf, ha, hb, sign, bits=act_bits)
+    if packed:
+        return quant_matmul_w4(q, s, zp, qw, sw, out_dtype=out_dtype)
+    return quant_matmul(q, s, zp, qw, sw, out_dtype=out_dtype)

@@ -98,7 +98,8 @@ class ServeEngine:
                  paged: bool = False, page_size: int = 16,
                  prefill_chunk: int = 0, n_pages: int = 0,
                  bucket: bool = True, paged_kernel: bool = False,
-                 schedule: str = "legacy", max_batch_tokens: int = 0):
+                 schedule: str = "legacy", max_batch_tokens: int = 0,
+                 fused: bool = True):
         family = getattr(model.cfg, "family", "dense")
         if family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
@@ -162,6 +163,15 @@ class ServeEngine:
         self._page_bytes = (sum(v.nbytes for v in cache.values())
                             // n_pages if paged else 0)
         self.mesh = mesh
+        # Fused serving params (QKV / gate-up concat + integer-epilogue
+        # colsums, models.Model.make_serving_params): single-device hot
+        # path only — the concatenated output dim would split unevenly
+        # across tensor-parallel head shards. Token-identical to the
+        # unfused params (golden-tested), so on by default.
+        msp = getattr(model, "make_serving_params", None)
+        self.fused = bool(fused and msp is not None and mesh is None)
+        if self.fused:
+            params = msp(params)
         tp_kw = dict(mesh=mesh, tp_axis=tp_axis, tp_mode=tp_mode,
                      tp_kernels=tp_kernels)
         if schedule == "unified":
@@ -190,11 +200,45 @@ class ServeEngine:
         self._pos = np.zeros((n_slots,), np.int32)     # per-slot positions
         self.step_count = 0
         self._next_rid = 0
+        self._dev_acc = 0.0             # device seconds within current step
         self.events: list[tuple] = []   # ("admit"|"retire", rid, slot, step)
         self.results: dict[int, RequestResult] = {}
-        self.metrics = {"queue_depth": [], "occupancy": [],
-                        "resident_kv_bytes": [], "step_s": [],
-                        "generated_tokens": 0, "decode_steps": 0}
+        self.metrics = self._fresh_metrics()
+
+    @staticmethod
+    def _fresh_metrics() -> dict:
+        return {"queue_depth": [], "occupancy": [],
+                "resident_kv_bytes": [], "step_s": [], "device_s": [],
+                "generated_tokens": 0, "decode_steps": 0}
+
+    def reset(self) -> None:
+        """Return an idle (drained) engine to its just-built state — fresh
+        metrics, results, events, positions, and scheduler/executor
+        counters — WITHOUT touching params, caches, or the jitted
+        executables. This is the warmup/steady-state benchmark hook: run
+        a workload once (pays every compile), ``reset()``, run it again
+        and read pure steady-state timings. Stale KV content from the
+        first run is harmless for exactly the reason slot reuse is: a
+        new occupant's prefill overwrites its rows and everything past
+        its position is causally masked."""
+        if not self.idle:
+            raise RuntimeError("reset() needs an idle engine "
+                               "(drain the queue first)")
+        self._pos[:] = 0
+        self.step_count = 0
+        self._next_rid = 0
+        self._dev_acc = 0.0
+        self.events = []
+        self.results = {}
+        self.metrics = self._fresh_metrics()
+        self.exec.n_dispatch = 0
+        if self.schedule == "unified":
+            self.sched.reset()
+            self._free = self.sched.free    # sched.reset() rebinds its list
+        else:
+            self._free = list(range(self.n_slots))
+        if self.paged:
+            self.pool.peak_in_use = self.pool.in_use
 
     # The executor owns the device cache; expose it under the historical
     # name so engine code (and tests) read/write one source of truth.
@@ -288,6 +332,7 @@ class ServeEngine:
             self._free.remove(slot)
             req = self._queue.popleft()
             p = len(req.prompt)
+            td = time.perf_counter()
             if self.paged:
                 self.tables.admit(slot, p,
                                   budget_tokens=p + req.max_new_tokens)
@@ -295,6 +340,8 @@ class ServeEngine:
             else:
                 toks, last = self._bucketed(req.prompt)
                 logits = self.exec.prefill_slot(toks, slot, last)
+            logits.block_until_ready()
+            self._dev_acc += time.perf_counter() - td
             self._pos[slot] = p
             tok = int(np.argmax(np.asarray(logits[0, -1])))
             rec = _Active(req, slot, [tok], self.step_count,
@@ -349,6 +396,7 @@ class ServeEngine:
         if self.schedule == "unified":
             return self._step_unified()
         t0 = time.perf_counter()
+        self._dev_acc = 0.0
         events_before = len(self.events)
         self._admit()
         admitted = len(self.events) > events_before
@@ -366,7 +414,9 @@ class ServeEngine:
         self.metrics["resident_kv_bytes"].append(self.resident_kv_bytes())
         if self._active:
             table = jnp.asarray(self.tables.table) if self.paged else None
+            td = time.perf_counter()
             logits = self.exec.decode(toks, self._pos, table)
+            self._dev_acc += time.perf_counter() - td
             self.metrics["decode_steps"] += 1
             for slot, rec in list(self._active.items()):
                 self._pos[slot] += 1          # the fed token was cached
@@ -376,6 +426,7 @@ class ServeEngine:
                     self._retire(rec)
         if admitted or occ > 0:
             self.metrics["step_s"].append(time.perf_counter() - t0)
+            self.metrics["device_s"].append(self._dev_acc)
         self.step_count += 1
         return {"queue_depth": self.metrics["queue_depth"][-1],
                 "occupancy": occ, "active": len(self._active)}
@@ -391,7 +442,9 @@ class ServeEngine:
         self.metrics["resident_kv_bytes"].append(self.resident_kv_bytes())
         if plan.n_tokens:
             packed = self.sched.pack(plan, kernel_desc=self.paged_kernel)
+            td = time.perf_counter()
             logits = self.exec.step(packed)
+            dev_s = time.perf_counter() - td
             toks = np.argmax(logits[:packed["n_logits"], -1], axis=-1)
             retired = self.sched.observe(plan, toks, time.time())
             self.metrics["generated_tokens"] += int(packed["n_logits"])
@@ -400,6 +453,7 @@ class ServeEngine:
             for seq in retired:
                 self._retire_seq(seq)
             self.metrics["step_s"].append(time.perf_counter() - t0)
+            self.metrics["device_s"].append(dev_s)
         self.step_count += 1
         return {"queue_depth": self.metrics["queue_depth"][-1],
                 "occupancy": occ, "active": len(self._active),
@@ -443,6 +497,10 @@ class ServeEngine:
         m = self.metrics
         ttfts = [r.ttft_s for r in self.results.values()]
         step_s = m["step_s"]
+        dev_s = m["device_s"]
+        device_ms = 1e3 * float(np.mean(dev_s)) if dev_s else 0.0
+        host_ms = (1e3 * float(np.mean(step_s)) - device_ms
+                   if step_s else 0.0)
         return {
             "n_requests": len(self.results),
             "n_slots": self.n_slots,
@@ -468,6 +526,14 @@ class ServeEngine:
             "quantized_kv": self.quantized_kv,
             "paged": self.paged,
             "schedule": self.schedule,
+            "fused": self.fused,
+            # hot-loop attribution: device vs host milliseconds per
+            # timed step, and device dispatches per engine step
+            "device_ms_mean": device_ms,
+            "host_ms_mean": max(0.0, host_ms),
+            "n_dispatch": self.exec.n_dispatch,
+            "dispatch_per_step": (self.exec.n_dispatch
+                                  / max(1, self.step_count)),
             "kv_capacity_bytes": sum(v.nbytes for v in self._cache.values()),
             "resident_kv_bytes_mean": (float(np.mean(
                 m["resident_kv_bytes"])) if m["resident_kv_bytes"] else 0),
@@ -478,8 +544,9 @@ class ServeEngine:
                 "pages_peak": self.pool.peak_in_use,
                 "prefill_chunk": self.prefill_chunk} if self.paged else {}),
             **({"max_batch_tokens": self.max_batch_tokens,
-                "packed_tokens_max": max(
-                    (t for t, *_ in self.sched.plan_log), default=0)}
+                # running counter, not a plan_log scan — the log is a
+                # capped ring and may have evicted the peak step
+                "packed_tokens_max": self.sched.packed_tokens_max}
                if self.schedule == "unified" else {}),
             "mesh": (dict(self.mesh.shape) if self.mesh is not None
                      else None),

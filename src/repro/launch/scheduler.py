@@ -129,7 +129,7 @@ class TokenBudgetScheduler:
 
     def __init__(self, n_slots: int, max_batch_tokens: int, *, pool,
                  tables, prefill_chunk: int = 0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, plan_log_cap: int = 4096):
         if max_batch_tokens < n_slots:
             raise ValueError(
                 f"max_batch_tokens={max_batch_tokens} must be >= "
@@ -145,12 +145,40 @@ class TokenBudgetScheduler:
         self.active: dict = {}          # slot -> SeqState
         self._admit_order = 0
         # lightweight per-step log for invariant tests / benchmarks:
-        # (n_tokens, decode slots, prefill slots, admitted rids)
-        self.plan_log: list = []
+        # (n_tokens, decode slots, prefill slots, admitted rids). A RING
+        # (maxlen=plan_log_cap) so a sustained serve doesn't grow host
+        # memory one tuple per step forever; running aggregates that must
+        # survive eviction live in counters (packed_tokens_max, n_plans).
+        self.plan_log: deque = deque(maxlen=plan_log_cap or None)
+        self.packed_tokens_max = 0
+        self.n_plans = 0
+        # pack()/_kernel_desc() write into preallocated buffers reused
+        # across steps (shapes are fixed per engine config); allocated
+        # lazily because n_ptab comes from the tables
+        self._buf: dict = {}
+
+    def reset(self) -> None:
+        """Drop per-run bookkeeping (log, counters, admission order) on an
+        idle scheduler — the engine's warmup/steady-state ``reset()``
+        hook. Slot and page state are already back at rest when idle."""
+        assert self.idle, "reset() needs an idle scheduler"
+        self.plan_log.clear()
+        self.packed_tokens_max = 0
+        self.n_plans = 0
+        self._admit_order = 0
+        self.free = list(range(self.n_slots))
 
     # ------------------------------------------------------------ planning
 
     def _chunk(self, want: int, budget: int) -> int:
+        # Budget-remainder audit (the "sliced chunk rounds to 0" worry):
+        # callers only reach here with budget >= 1 (the in-flight loop
+        # breaks at budget <= 0, admission requires budget > 0) and
+        # want >= 1 (an in-flight prefilling seq has prompt_len >
+        # prefill_done; admission prompts are non-empty), so n >= 1
+        # always — a slot can never stall a cycle receiving a 0-token
+        # chunk while budget remains. Property-tested in
+        # tests/test_scheduler_properties.py (chunks are never empty).
         n = min(want, budget)
         if self.prefill_chunk:
             n = min(n, self.prefill_chunk)
@@ -206,6 +234,8 @@ class TokenBudgetScheduler:
             budget -= n
         plan._prompt_lens = {s: seq.prompt_len
                              for s, seq in self.active.items()}
+        self.packed_tokens_max = max(self.packed_tokens_max, plan.n_tokens)
+        self.n_plans += 1
         self.plan_log.append((plan.n_tokens,
                               tuple(s for s, _, _ in plan.decode),
                               tuple(s for s, _, _, _ in plan.prefill),
@@ -214,6 +244,40 @@ class TokenBudgetScheduler:
 
     # ------------------------------------------------------------- packing
 
+    def _buffers(self, kernel_desc: bool) -> dict:
+        """The preallocated host arrays ``pack`` fills — allocated once
+        (shapes are fixed per engine config) and RESET + reused every
+        step, so the serving hot loop stops paying a numpy allocation
+        per descriptor per step. The returned views are valid until the
+        next ``pack()`` call; the executor copies them to device
+        (``jnp.asarray``) immediately."""
+        if not self._buf:
+            T, R, n_ptab = (self.max_batch_tokens, self.n_slots,
+                            self.tables.n_ptab)
+            q_width = min(T, self.prefill_chunk) if self.prefill_chunk else T
+            self._buf = {
+                "tokens": np.zeros((T,), np.int32),
+                "pos": np.zeros((T,), np.int32),
+                "slot_of": np.empty((T,), np.int32),
+                "logit_rows": np.zeros((R,), np.int32),
+                "ptab": np.zeros((T, n_ptab), np.int32),
+                "qidx": np.zeros((R, q_width), np.int32),
+                "qpos": np.empty((R, q_width), np.int32),
+                "lengths": np.zeros((R,), np.int32),
+                "table": np.zeros((R, n_ptab), np.int32),
+                "inv_seq": np.zeros((T,), np.int32),
+                "inv_qi": np.zeros((T,), np.int32),
+            }
+        b = self._buf
+        for name in ("tokens", "pos", "logit_rows", "ptab"):
+            b[name][...] = 0
+        b["slot_of"].fill(-1)
+        if kernel_desc:
+            for name in ("qidx", "lengths", "table", "inv_seq", "inv_qi"):
+                b[name][...] = 0
+            b["qpos"].fill(-1)
+        return b
+
     def pack(self, plan: StepPlan, *, kernel_desc: bool = False) -> dict:
         """Flatten a plan into the fixed-shape arrays the ragged device
         step consumes (ONE compile shape per engine): ``tokens`` (T, 1),
@@ -221,12 +285,15 @@ class TokenBudgetScheduler:
         (null rows for padding), ``logit_rows`` (n_slots,) packed-row
         indices of the logit consumers. ``kernel_desc`` additionally
         emits the per-work-item query-block descriptors the ragged
-        paged-attention kernel wants (``ragged_desc``)."""
+        paged-attention kernel wants (``ragged_desc``).
+
+        The arrays are views of buffers reused across steps (see
+        ``_buffers``): read/copy them before the next ``pack()``."""
         T = self.max_batch_tokens
-        n_ptab = self.tables.n_ptab
-        tokens = np.zeros((T,), np.int32)
-        pos = np.zeros((T,), np.int32)
-        slot_of = np.full((T,), -1, np.int32)
+        buf = self._buffers(kernel_desc)
+        tokens = buf["tokens"]
+        pos = buf["pos"]
+        slot_of = buf["slot_of"]
         items = []                      # (slot, start row, q_len, last pos)
         last_row = {}                   # slot -> its item's last packed row
         i = 0
@@ -246,20 +313,20 @@ class TokenBudgetScheduler:
         # over — single-sourced so the row/consumer alignment cannot
         # drift (each consumer reads its slot's last packed row)
         consumers = plan.logit_consumers
-        logit_rows = np.zeros((self.n_slots,), np.int32)
+        logit_rows = buf["logit_rows"]
         for j, (_kind, slot) in enumerate(consumers):
             logit_rows[j] = last_row[slot]
-        ptab = np.zeros((T, n_ptab), np.int32)
+        ptab = buf["ptab"]
         valid = slot_of >= 0
         ptab[valid] = self.tables.table[slot_of[valid]]
         packed = {"tokens": tokens[:, None], "pos": pos,
                   "page_table": ptab, "logit_rows": logit_rows,
                   "n_logits": len(consumers)}
         if kernel_desc:
-            packed["ragged_desc"] = self._kernel_desc(items, T, n_ptab)
+            packed["ragged_desc"] = self._kernel_desc(items, buf)
         return packed
 
-    def _kernel_desc(self, items, T: int, n_ptab: int) -> dict:
+    def _kernel_desc(self, items, buf: dict) -> dict:
         """Per-work-item query blocks for the ragged paged-attention
         kernel: row j holds work item j's packed-row indices and absolute
         positions (padded with qpos=-1 -> fully masked), its page-table
@@ -273,16 +340,12 @@ class TokenBudgetScheduler:
         compiles) but without padding every item to the full packed
         width. Set ``prefill_chunk`` alongside ``paged_kernel`` to keep
         the kernel's masked padding rows small."""
-        R = self.n_slots
         # block width Q bounds one ITEM's q_len; the inv_* maps stay at
-        # the full packed width T (they are indexed by packed row)
-        q_width = min(T, self.prefill_chunk) if self.prefill_chunk else T
-        qidx = np.zeros((R, q_width), np.int32)
-        qpos = np.full((R, q_width), -1, np.int32)
-        lengths = np.zeros((R,), np.int32)
-        table = np.zeros((R, n_ptab), np.int32)
-        inv_seq = np.zeros((T,), np.int32)
-        inv_qi = np.zeros((T,), np.int32)
+        # the full packed width T (they are indexed by packed row).
+        # All arrays are the reused _buffers views, already reset.
+        qidx, qpos = buf["qidx"], buf["qpos"]
+        lengths, table = buf["lengths"], buf["table"]
+        inv_seq, inv_qi = buf["inv_seq"], buf["inv_qi"]
         for j, (slot, start, n, last) in enumerate(items):
             qidx[j, :n] = start + np.arange(n)
             qpos[j, :n] = last - n + 1 + np.arange(n)

@@ -66,6 +66,32 @@ def greedy_generate(model, params, prompts: jnp.ndarray, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
+def run_steady(engine: ServeEngine, requests, passes: int = 1) -> tuple:
+    """Drain the workload through the SAME engine ``1 + passes`` times —
+    the first pass triggers every jit compile (untimed), then each
+    ``engine.reset()`` + rerun measures steady-state throughput and the
+    fastest pass is reported (every pass does identical work, so wall
+    differences are scheduler noise; the envelope is the honest
+    steady-state number on a shared host). Returns ``(results, summary)``
+    from the best pass, with ``summary["compile_s"] = wall_first -
+    wall_best`` (the first pass does the same work plus compilation —
+    cost the old single-pass numbers were charging to tok/s, which
+    buried the quantized variants: their transform+quant chains trace
+    more distinct XLA programs than fp)."""
+    engine.run(requests)
+    wall_first = engine.summary()["wall_s"]
+    best = None
+    for _ in range(max(1, passes)):
+        engine.reset()
+        results = engine.run(requests)
+        summary = engine.summary()
+        if best is None or summary["wall_s"] < best[1]["wall_s"]:
+            best = (results, summary)
+    results, summary = best
+    summary["compile_s"] = max(0.0, wall_first - summary["wall_s"])
+    return results, summary
+
+
 def build_served_model(arch: str, transform: str, w_bits: int, a_bits: int,
                        kv_bits: int, smoke: bool, seed: int,
                        cfg_overrides: Optional[dict] = None):
@@ -112,7 +138,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     mesh=None, cfg_overrides: Optional[dict] = None,
                     paged: bool = False, page_size: int = 16,
                     prefill_chunk: int = 0, max_len: int = 0,
-                    schedule: str = "legacy", max_batch_tokens: int = 0):
+                    schedule: str = "legacy", max_batch_tokens: int = 0,
+                    warmup: int = 0):
     """Quantize then serve a workload through the engine.
 
     Default (``mixed=False``): ``batch`` uniform-length requests so
@@ -126,7 +153,11 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     prefill compiles once) — token-identical to the slot engine.
     ``schedule="unified"`` packs decode tokens + prefill chunks into one
     token-budgeted ragged step per cycle (``max_batch_tokens``) —
-    token-identical again, with flat ITL under long-prompt admission."""
+    token-identical again, with flat ITL under long-prompt admission.
+    ``warmup=N`` (N >= 1) drains the workload once untimed then reports
+    the fastest of N steady passes (``run_steady``), so the metrics are
+    steady-state and compilation cost lands in the separate
+    ``compile_s`` summary field."""
     cfg, model, params, mem = build_served_model(
         arch, transform, w_bits, a_bits, kv_bits, smoke, seed,
         cfg_overrides=cfg_overrides)
@@ -145,8 +176,11 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                          paged=paged, page_size=page_size,
                          prefill_chunk=prefill_chunk, schedule=schedule,
                          max_batch_tokens=max_batch_tokens)
-    results = engine.run(requests)
-    summary = engine.summary()
+    if warmup:
+        results, summary = run_steady(engine, requests, passes=int(warmup))
+    else:
+        results = engine.run(requests)
+        summary = engine.summary()
     out = {
         "arch": arch, "transform": transform,
         "results": results,

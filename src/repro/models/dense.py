@@ -131,9 +131,23 @@ def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
 
     h = rms_norm(x, lp["ln1"])
     _tap(taps, layer_idx, "attn_in", h)
-    q = qlinear.dense(lp["wq"], h).reshape(b, s, -1, cfg.head_dim)
-    k = qlinear.dense(lp["wk"], h).reshape(b, s, -1, cfg.head_dim)
-    v = qlinear.dense(lp["wv"], h).reshape(b, s, -1, cfg.head_dim)
+    if "wqkv" in lp:
+        # fused serving params (make_serving_params): one concatenated
+        # QKV projection — one transform+quant+matmul chain instead of
+        # three. Column slices of a matmul are exact, so splitting the
+        # output reproduces the separate projections bitwise.
+        qkv = qlinear.dense(lp["wqkv"], h)
+        hq, hkv = cfg.q_dim, cfg.kv_dim
+        q = qkv[..., :hq]
+        k = qkv[..., hq:hq + hkv]
+        v = qkv[..., hq + hkv:]
+        q = q.reshape(b, s, -1, cfg.head_dim)
+        k = k.reshape(b, s, -1, cfg.head_dim)
+        v = v.reshape(b, s, -1, cfg.head_dim)
+    else:
+        q = qlinear.dense(lp["wq"], h).reshape(b, s, -1, cfg.head_dim)
+        k = qlinear.dense(lp["wk"], h).reshape(b, s, -1, cfg.head_dim)
+        v = qlinear.dense(lp["wv"], h).reshape(b, s, -1, cfg.head_dim)
     if cfg.qk_norm:
         q = rms_norm(q, lp["q_norm"])
         k = rms_norm(k, lp["k_norm"])
@@ -237,7 +251,12 @@ def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
     else:
         from repro.models.layers import activation
         act = activation(cfg.act)
-        if cfg.gated_mlp:
+        if "wgu" in lp:
+            # fused serving params: concatenated gate|up projection
+            gu = qlinear.dense(lp["wgu"], h2)
+            f = gu.shape[-1] // 2
+            hmid = act(gu[..., :f]) * gu[..., f:]
+        elif cfg.gated_mlp:
             hmid = act(qlinear.dense(lp["wg"], h2)) * qlinear.dense(lp["wu"], h2)
         else:
             hmid = act(qlinear.dense(lp["wu"], h2))
@@ -377,6 +396,57 @@ def loss(cfg, params, batch, *, loss_chunk: int = 512):
         hidden = hidden[:, extra.shape[1]:]
     return chunked_ce(lambda h: logits_fn(cfg, params, h), hidden,
                       batch["labels"], aux, loss_chunk=loss_chunk)
+
+
+# ----------------------------------------------------------------- serving
+
+def make_serving_params(cfg, params, keep_packed=None) -> dict:
+    """The fused-serving variant of a params pytree (single-device engine
+    hot path; ``ServeEngine(fused=True)`` applies it at build time):
+
+    * wq|wk|wv -> one ``wqkv`` and wg|wu -> one ``wgu`` column-concat
+      (exact: the pipeline quantizes group members against ONE shared
+      input transform, so the concat collapses three transform + quant +
+      matmul chains — which XLA cannot CSE across distinct stacked
+      params — into one; fp params concat too, so the comparison stays
+      like-for-like).
+    * every QLinear gains the precomputed ``colsum`` for the
+      integer-accumulation epilogue (``qlinear.dense_fused``) and, off
+      TPU, the dequantized compute-dtype weight ``w_eff`` so the per-step
+      unpack + dequant chain moves to build time
+      (see ``qlinear.make_serving``).
+
+    Tensor-parallel serving keeps the original per-member params — the
+    concatenated output dim would split unevenly across head shards.
+    Decoded tokens are bitwise identical to the unfused params (golden
+    fixtures run both)."""
+    from repro.core.qlinear import QLinear, concat_out, make_serving
+
+    cd = _compute_dtype(cfg)
+    layers = dict(params["layers"])
+
+    def try_concat(names, out_name):
+        if not all(n in layers for n in names):
+            return
+        cat = concat_out([layers[n] for n in names], keep_packed, cd)
+        if cat is None:
+            return
+        for n in names:
+            del layers[n]
+        layers[out_name] = cat
+
+    try_concat(("wq", "wk", "wv"), "wqkv")
+    if cfg.gated_mlp and not cfg.n_experts:
+        try_concat(("wg", "wu"), "wgu")
+
+    def prep(leaf):
+        if isinstance(leaf, QLinear) and leaf.colsum is None:
+            return make_serving(leaf, keep_packed, cd)
+        return leaf
+
+    layers = jax.tree.map(prep, layers,
+                          is_leaf=lambda x: isinstance(x, QLinear))
+    return dict(params, layers=layers)
 
 
 # ------------------------------------------------------------------ caches

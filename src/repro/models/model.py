@@ -32,6 +32,11 @@ class Model:
     # the unified token-budget step over a flat ragged batch of mixed
     # prefill-chunk + decode rows (None for families without one)
     ragged_step: Optional[Callable] = None
+    # (params) -> fused-serving params (QKV/gate-up concat + colsum /
+    # pre-unpacked codes; see models.dense.make_serving_params); None for
+    # families without a fused hot path. The serve engine applies it at
+    # build time on the single-device path.
+    make_serving_params: Optional[Callable] = None
 
 
 _FAMILIES = {
@@ -63,6 +68,9 @@ def build(cfg) -> Model:
             (lambda params, tokens, cache, logit_rows, **kw:
              mod.ragged_step(cfg, params, tokens, cache, logit_rows, **kw))
             if hasattr(mod, "ragged_step") else None),
+        make_serving_params=(
+            (lambda params, **kw: mod.make_serving_params(cfg, params, **kw))
+            if hasattr(mod, "make_serving_params") else None),
     )
 
 

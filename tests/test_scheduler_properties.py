@@ -56,14 +56,14 @@ def _simulate(prompt, max_new, eos_id):
 
 
 def _make_sched(n_slots, max_batch_tokens, max_len, page_size=4,
-                prefill_chunk=0, eos_id=None):
+                prefill_chunk=0, eos_id=None, **kw):
     kv_len = -(-max_len // page_size) * page_size
     n_ptab = kv_len // page_size
     pool = PagePool(1 + n_slots * n_ptab, page_size)
     tables = SlotPageTables(pool, n_slots, n_ptab)
     return TokenBudgetScheduler(n_slots, max_batch_tokens, pool=pool,
                                 tables=tables, prefill_chunk=prefill_chunk,
-                                eos_id=eos_id)
+                                eos_id=eos_id, **kw)
 
 
 def _drive(lengths, budgets, n_slots, max_batch_tokens, eos_id=None,
@@ -323,3 +323,97 @@ def test_unified_engine_matches_legacy_on_stub(budget, chunk):
     retires = sorted(e[1] for e in uni.events if e[0] == "retire")
     assert retires == sorted(r["rid"] for r in reqs)
     assert uni.idle and uni.pool.in_use == 0
+
+
+# --------------------------------------------- hot-loop regression tests
+
+@given(want=st.integers(1, 64), budget=st.integers(1, 64),
+       chunk=st.integers(0, 16))
+@settings(max_examples=200, deadline=None)
+def test_property_chunk_never_zero(want, budget, chunk):
+    """Budget-remainder audit: for every (want >= 1, budget >= 1) a
+    caller can reach ``_chunk`` with, the sliced chunk is >= 1 — a slot
+    can never stall a cycle on a 0-token chunk while budget remains."""
+    sched = _make_sched(2, max(budget, 2), 32, prefill_chunk=chunk)
+    n = sched._chunk(want, budget)
+    assert 1 <= n <= min(want, budget)
+    if chunk:
+        assert n <= chunk
+
+
+def test_plan_log_is_a_capped_ring():
+    """The per-step plan log must not grow without bound on a long-lived
+    engine; the running counters keep reporting over evicted steps."""
+    sched = _make_sched(2, 6, 64, plan_log_cap=8)
+    assert sched.plan_log.maxlen == 8
+    rng = np.random.default_rng(3)
+    for rid in range(12):
+        sched.queue.append(Request(
+            rid, rng.integers(0, _V, 3).astype(np.int32), 2))
+    guard = 0
+    while not sched.idle:
+        guard += 1
+        assert guard < 1000
+        plan = sched.plan(guard)
+        sched.pack(plan)
+        toks = np.asarray([1] * len(plan.logit_consumers))
+        for seq in sched.observe(plan, toks, now=0.0):
+            pass
+    assert len(sched.plan_log) <= 8
+    assert sched.n_plans == guard > 8          # counted past the cap
+    assert 0 < sched.packed_tokens_max <= 6    # tracked outside the ring
+
+
+def test_pack_reuses_descriptor_buffers():
+    """pack() reuses one set of host descriptor buffers across steps (no
+    per-step allocation in the hot loop): the arrays returned by
+    consecutive packs are the SAME objects, refilled — and refilled
+    correctly (packing the same plan twice gives equal contents)."""
+    sched = _make_sched(2, 6, 32)
+    rng = np.random.default_rng(5)
+    for rid in range(2):
+        sched.queue.append(Request(
+            rid, rng.integers(0, _V, 4).astype(np.int32), 2))
+    plan = sched.plan(0)
+    first = sched.pack(plan)
+    snap = {k: np.array(v, copy=True) for k, v in first.items()
+            if isinstance(v, np.ndarray)}
+    second = sched.pack(plan)
+    for k, v in second.items():
+        if isinstance(v, np.ndarray):
+            assert v.base is not None or v is first[k] or \
+                v.__array_interface__["data"] == \
+                first[k].__array_interface__["data"], k
+            np.testing.assert_array_equal(v, snap[k])
+
+
+def test_scheduler_reset_reuses_engine():
+    """reset() returns a drained scheduler to its initial state: a second
+    identical workload must produce identical plans and tokens."""
+    def drain(sched, reqs):
+        for r in reqs:
+            sched.queue.append(r)
+        toks_out, guard = {}, 0
+        while not sched.idle:
+            guard += 1
+            assert guard < 1000
+            plan = sched.plan(guard)
+            packed = sched.pack(plan)
+            toks = [_next_token(int(packed["tokens"][row, 0]),
+                                int(packed["pos"][row]))
+                    for _, row in zip(plan.logit_consumers,
+                                      packed["logit_rows"])]
+            for seq in sched.observe(plan, np.asarray(toks), now=0.0):
+                toks_out[seq.req.rid] = list(seq.generated)
+        return toks_out
+
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, _V, p).astype(np.int32) for p in (5, 3, 9)]
+    sched = _make_sched(2, 5, 32)
+    first = drain(sched, [Request(i, p, 3)
+                          for i, p in enumerate(prompts)])
+    sched.reset()
+    assert sched.pool.in_use == 0 and not sched.plan_log
+    second = drain(sched, [Request(i, p, 3)
+                           for i, p in enumerate(prompts)])
+    assert first == second
