@@ -56,7 +56,7 @@ def make_batch(cfg, seq_len: int, batch: int, *, seed: int = 0,
 
 def request_workload(cfg, n_requests: int = 8, *, gen: int = 16,
                      lengths: tuple = (8, 12, 16, 24), min_gen: int = 0,
-                     seed: int = 0) -> list:
+                     seed: int = 0, shared_prefix: int = 0) -> list:
     """Mixed-prompt-length serving workload for the continuous-batching
     engine: a list of ``{"rid", "tokens" (P,) int32, "max_new_tokens"}``.
 
@@ -64,12 +64,21 @@ def request_workload(cfg, n_requests: int = 8, *, gen: int = 16,
     distinct length costs one prefill compile in the engine); decode
     budgets are uniform in [min_gen or gen, gen]. Deterministic per
     (seed, rid): request ``rid``'s tokens do not depend on n_requests, so
-    a prefix of the workload is a smaller workload."""
+    a prefix of the workload is a smaller workload.
+
+    ``shared_prefix > 0`` prepends that many common "system prompt"
+    tokens (identical across all requests, deterministic per seed) to
+    every per-request suffix — the workload the paged engine's prefix
+    cache deduplicates."""
+    common = (token_stream(cfg.vocab, shared_prefix, 1, seed=seed,
+                           step=999)[0] if shared_prefix else None)
     reqs = []
     for rid in range(n_requests):
         rng = np.random.default_rng(np.random.SeedSequence([seed, 7, rid]))
         p = int(rng.choice(lengths))
         toks = token_stream(cfg.vocab, p, 1, seed=seed, step=1000 + rid)[0]
+        if common is not None:
+            toks = np.concatenate([common, toks])
         g = int(rng.integers(min_gen, gen + 1)) if min_gen else gen
         reqs.append({"rid": rid, "tokens": toks, "max_new_tokens": g})
     return reqs

@@ -99,7 +99,7 @@ class ServeEngine:
                  prefill_chunk: int = 0, n_pages: int = 0,
                  bucket: bool = True, paged_kernel: bool = False,
                  schedule: str = "legacy", max_batch_tokens: int = 0,
-                 fused: bool = True):
+                 fused: bool = True, prefix_cache: bool = False):
         family = getattr(model.cfg, "family", "dense")
         if family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
@@ -147,9 +147,26 @@ class ServeEngine:
             n_pages = n_pages or 1 + n_slots * n_ptab  # worst case + null
             self.pool = PagePool(n_pages, page_size)
             self.tables = SlotPageTables(self.pool, n_slots, n_ptab)
+            self.prefix = None
+            if prefix_cache:
+                # automatic prefix caching: COW page sharing across
+                # requests (launch.paged.PrefixCache). The config digest
+                # keys the trie so pages can never cross quantization
+                # configs.
+                from repro.launch.paged import PrefixCache
+                cfg = model.cfg
+                self.prefix = PrefixCache(
+                    self.pool, page_size,
+                    config_key=(family, cfg.n_layers, cfg.n_kv_heads,
+                                cfg.head_dim, cfg.kv_quant_bits,
+                                str(getattr(cfg, "dtype", "?"))))
             cache = model.init_paged_cache(n_pages, page_size)
             cache = dict(cache)
         else:
+            if prefix_cache:
+                raise ValueError("prefix_cache needs paged=True (cached "
+                                 "prefixes are shared pool pages)")
+            self.prefix = None
             if prefill_chunk:
                 raise ValueError("prefill_chunk needs paged=True (the slot "
                                  "cache keeps whole-prompt prefill; use "
@@ -179,8 +196,9 @@ class ServeEngine:
             self.sched = TokenBudgetScheduler(
                 n_slots, self.max_batch_tokens, pool=self.pool,
                 tables=self.tables, prefill_chunk=prefill_chunk,
-                eos_id=eos_id)
+                eos_id=eos_id, prefix=self.prefix)
             self.exec = RaggedExecutor(model, params, cache,
+                                       n_slots=n_slots,
                                        paged_kernel=paged_kernel, **tp_kw)
             # shared host state lives in the scheduler; alias it so the
             # introspection surface matches legacy mode
@@ -239,6 +257,10 @@ class ServeEngine:
             self._free = list(range(self.n_slots))
         if self.paged:
             self.pool.peak_in_use = self.pool.in_use
+        if self.prefix is not None:
+            # a warm cache is server state (like compiled code): keep the
+            # trie across warmup/steady resets, zero only the counters
+            self.prefix.reset_stats()
 
     # The executor owns the device cache; expose it under the historical
     # name so engine code (and tests) read/write one source of truth.
@@ -299,19 +321,24 @@ class ServeEngine:
             return prompt, p - 1
         return np.pad(prompt, (0, width - p)), p - 1
 
-    def _prefill_paged(self, req: Request, slot: int):
-        """Prefill into the slot's freshly-allocated pages: one bucketed
+    def _prefill_paged(self, req: Request, slot: int, start: int = 0):
+        """Prefill rows [start, P) into the slot's pages: one bucketed
         call, or fixed-size chunks at successive offsets (ONE compile
-        total) when ``prefill_chunk`` is set."""
+        total) when ``prefill_chunk`` is set. ``start > 0`` is the prefix
+        cache's first-miss offset — rows [0, start) are already served by
+        shared (or COW-copied) pages, so their prefill is skipped
+        entirely; a chunked span starting mid-page writes only the rows
+        past the COW boundary (numerically a suffix of the chunked
+        schedule the golden fixtures already pin)."""
         p = len(req.prompt)
         row = jnp.asarray(self.tables.table[slot:slot + 1])
         chunk = self.prefill_chunk
         if not chunk:
-            toks, last = self._bucketed(req.prompt)
-            spans = [(toks, 0, last)]
+            toks, last = self._bucketed(req.prompt[start:])
+            spans = [(toks, start, last)]
         else:
             spans = []
-            for off in range(0, p, chunk):
+            for off in range(start, p, chunk):
                 toks = np.zeros((chunk,), np.int32)
                 n = min(chunk, p - off)
                 toks[:n] = req.prompt[off:off + n]
@@ -325,23 +352,44 @@ class ServeEngine:
     def _admit(self) -> None:
         while self._free and self._queue:
             head = self._queue[0]
-            if self.paged and not self.tables.can_admit(
-                    len(head.prompt) + head.max_new_tokens):
-                break                       # head-of-line wait (stays FIFO)
+            hit, pages = 0, []
+            if self.paged:
+                budget_tokens = len(head.prompt) + head.max_new_tokens
+                if self.prefix is not None:
+                    hit, pages = self.prefix.lookup(head.prompt)
+                    ok = self.prefix.make_room(self.tables, budget_tokens,
+                                               hit_tokens=hit,
+                                               protect=pages)
+                else:
+                    ok = self.tables.can_admit(budget_tokens)
+                if not ok:
+                    break                   # head-of-line wait (stays FIFO)
             slot = min(self._free)          # deterministic: lowest free slot
             self._free.remove(slot)
             req = self._queue.popleft()
             p = len(req.prompt)
             td = time.perf_counter()
             if self.paged:
-                self.tables.admit(slot, p,
-                                  budget_tokens=p + req.max_new_tokens)
-                logits = self._prefill_paged(req, slot)
+                self.tables.admit_prefix(slot, pages, hit, p,
+                                         budget_tokens=p
+                                         + req.max_new_tokens)
+                if self.prefix is not None:
+                    self.prefix.note(hit, p)
+                    cow = self.tables.ensure_writable(slot, hit)
+                    if cow:
+                        self.prefix.cow_copies += len(cow)
+                        self.exec.copy_pages(cow)
+                self.tables.assert_writable(slot, hit, p - 1)
+                logits = self._prefill_paged(req, slot, start=hit)
             else:
                 toks, last = self._bucketed(req.prompt)
                 logits = self.exec.prefill_slot(toks, slot, last)
             logits.block_until_ready()
             self._dev_acc += time.perf_counter() - td
+            if self.prefix is not None:
+                # prefill landed -> adopt the full prompt pages
+                self.prefix.register(req.prompt,
+                                     self.tables.owned_pages(slot))
             self._pos[slot] = p
             tok = int(np.argmax(np.asarray(logits[0, -1])))
             rec = _Active(req, slot, [tok], self.step_count,
@@ -384,9 +432,14 @@ class ServeEngine:
         (paged) or the whole slot allocation (contiguous — every slot
         reserves max_len rows up front regardless of use). Reported in
         BOTH modes so slot-vs-paged benchmark rows compare like for
-        like."""
+        like. With a prefix cache, pages shared across slots count once
+        (the dedup win) and pages retained only by the cache don't count
+        as live at all — cache retention is reported separately
+        (``cached_kv_bytes`` in ``summary()``)."""
         if self.paged:
-            return self.pool.in_use * self._page_bytes
+            n = (self.tables.slot_mapped_pages if self.prefix is not None
+                 else self.pool.in_use)
+            return n * self._page_bytes
         return sum(v.nbytes for v in self._cache.values())
 
     def step(self) -> dict:
@@ -443,6 +496,10 @@ class ServeEngine:
         if plan.n_tokens:
             packed = self.sched.pack(plan, kernel_desc=self.paged_kernel)
             td = time.perf_counter()
+            if plan.cow:
+                # COW page copies dispatch BEFORE the step so shared
+                # content is duplicated before any divergent row lands
+                self.exec.copy_pages(plan.cow)
             logits = self.exec.step(packed)
             dev_s = time.perf_counter() - td
             toks = np.argmax(logits[:packed["n_logits"], -1], axis=-1)
@@ -542,7 +599,12 @@ class ServeEngine:
             **({"page_size": self.pool.page_size,
                 "n_pages": self.pool.n_pages,
                 "pages_peak": self.pool.peak_in_use,
-                "prefill_chunk": self.prefill_chunk} if self.paged else {}),
+                "prefill_chunk": self.prefill_chunk,
+                "prefix_cache": self.prefix is not None}
+               if self.paged else {}),
+            **({**self.prefix.stats(),
+                "cached_kv_bytes": self.prefix.resident * self._page_bytes}
+               if self.prefix is not None else {}),
             **({"max_batch_tokens": self.max_batch_tokens,
                 # running counter, not a plan_log scan — the log is a
                 # capped ring and may have evicted the peak step

@@ -104,6 +104,47 @@ def _unified_step(step_fn, paged_kernel, params, cache, tokens, pos,
     return logits, cache
 
 
+# COW page copy (prefix caching): duplicate src pages' rows into dst
+# pages across every pool leaf before the step that writes the divergent
+# rows. ``copy_fn`` (model.copy_paged_pages) is static; the cache is
+# donated so the copy is in place on donation-capable backends. Pairs
+# are padded with (0, 0) null-page self-copies (inert) to ONE fixed
+# width — pow-2 ceil of n_slots, the most COW splits a single plan can
+# carry — so the copy compiles exactly once per engine and never traces
+# inside a timed pass. Under a mesh the pools arrive sharded (heads on
+# "model", page axis whole) and jit partitions the per-page
+# gather/scatter over the head shards.
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _copy_pages(copy_fn, cache, src, dst):
+    return copy_fn(cache, src, dst)
+
+
+class _CopyPagesMixin:
+    """Host-facing COW dispatch shared by both executors."""
+
+    def copy_pages(self, pairs) -> None:
+        """Device-copy each (src, dst) page pair in ONE dispatch (issued
+        strictly before the step/prefill that writes past the shared
+        boundary — dispatch order is device order on a stream, so even a
+        src freed and reallocated within the same plan is read before
+        its new owner writes it)."""
+        if not pairs:
+            return
+        copy_fn = self.model.copy_paged_pages
+        if copy_fn is None:
+            raise NotImplementedError(
+                f"family {getattr(self.model.cfg, 'family', '?')!r} has "
+                f"no paged-pool page copy (copy_paged_pages)")
+        self.n_dispatch += 1
+        width = 1 << (max(len(pairs), self.n_slots) - 1).bit_length()
+        src = np.zeros((width,), np.int32)
+        dst = np.zeros((width,), np.int32)
+        for i, (s, d) in enumerate(pairs):
+            src[i], dst[i] = s, d
+        self.cache = _copy_pages(copy_fn, self.cache, jnp.asarray(src),
+                                 jnp.asarray(dst))
+
+
 # ------------------------------------------------- shared mesh validation
 
 def _validate_tp(cfg, mesh, tp_axis: str, tp_mode: str, params) -> int:
@@ -135,7 +176,7 @@ def _validate_tp(cfg, mesh, tp_axis: str, tp_mode: str, params) -> int:
 
 # --------------------------------------------------------- legacy executor
 
-class LegacyExecutor:
+class LegacyExecutor(_CopyPagesMixin):
     """Prefill-on-admit + batched-decode dispatch (the engine's original
     device path, unchanged numerics — it stays the oracle the unified
     step is golden-tested against)."""
@@ -296,12 +337,13 @@ class LegacyExecutor:
 
 # --------------------------------------------------------- ragged executor
 
-class RaggedExecutor:
+class RaggedExecutor(_CopyPagesMixin):
     """The unified token-budget step: one ragged model invocation per
     engine step over the flat packed token batch (see module docstring
     and ``scheduler.TokenBudgetScheduler.pack``)."""
 
-    def __init__(self, model, params, cache, *, paged_kernel: bool = False,
+    def __init__(self, model, params, cache, *, n_slots: int = 1,
+                 paged_kernel: bool = False,
                  mesh=None, tp_axis: str = "model",
                  tp_mode: str = "gather", tp_kernels: bool = False):
         if model.ragged_step is None:
@@ -309,6 +351,7 @@ class RaggedExecutor:
                 f"family {getattr(model.cfg, 'family', '?')!r} has no "
                 f"ragged (unified-step) forward")
         self.model, self.params, self.cache = model, params, cache
+        self.n_slots = n_slots
         self.paged_kernel = paged_kernel
         self.mesh = mesh
         self.n_dispatch = 0     # device calls issued (hot-loop accounting)

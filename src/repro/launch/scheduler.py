@@ -94,11 +94,15 @@ class StepPlan:
     """One step's packed work. ``decode``: (slot, fed token, write pos)
     triples, one per running slot. ``prefill``: (slot, offset, q_len,
     tokens) chunks. ``admitted``: (rid, slot) pairs admitted this step.
-    Logits are consumed in packing order: every decode row, then every
-    prefill chunk that *completes* its prompt (``logit_consumers``)."""
+    ``cow``: (src, dst) page pairs the executor must device-copy BEFORE
+    running the step (copy-on-write splits of partially-shared prefix
+    pages). Logits are consumed in packing order: every decode row, then
+    every prefill chunk that *completes* its prompt
+    (``logit_consumers``)."""
     decode: list = dataclasses.field(default_factory=list)
     prefill: list = dataclasses.field(default_factory=list)
     admitted: list = dataclasses.field(default_factory=list)
+    cow: list = dataclasses.field(default_factory=list)
 
     @property
     def n_tokens(self) -> int:
@@ -129,7 +133,8 @@ class TokenBudgetScheduler:
 
     def __init__(self, n_slots: int, max_batch_tokens: int, *, pool,
                  tables, prefill_chunk: int = 0,
-                 eos_id: Optional[int] = None, plan_log_cap: int = 4096):
+                 eos_id: Optional[int] = None, plan_log_cap: int = 4096,
+                 prefix=None):
         if max_batch_tokens < n_slots:
             raise ValueError(
                 f"max_batch_tokens={max_batch_tokens} must be >= "
@@ -140,6 +145,10 @@ class TokenBudgetScheduler:
         self.prefill_chunk = prefill_chunk
         self.eos_id = eos_id
         self.pool, self.tables = pool, tables
+        # optional launch.paged.PrefixCache: admission looks up the
+        # longest cached prefix and plans prefill only from the first
+        # miss token (the hit's pages are mapped shared into the slot)
+        self.prefix = prefix
         self.queue: deque = deque()
         self.free = list(range(n_slots))
         self.active: dict = {}          # slot -> SeqState
@@ -206,31 +215,52 @@ class TokenBudgetScheduler:
                 break
             n = self._chunk(seq.prompt_len - seq.prefill_done, budget)
             self.tables.ensure(seq.slot, seq.prefill_done + n - 1)
+            self.tables.assert_writable(seq.slot, seq.prefill_done,
+                                        seq.prefill_done + n - 1)
             toks = np.asarray(seq.req.prompt[seq.prefill_done:
                                              seq.prefill_done + n],
                               np.int32)
             plan.prefill.append((seq.slot, seq.prefill_done, n, toks))
             seq.prefill_done += n
             budget -= n
-        # 3. admission: queue head only (FIFO head-of-line wait)
+        # 3. admission: queue head only (FIFO head-of-line wait). With a
+        # prefix cache, admission looks up the longest cached prefix
+        # first: its pages are mapped shared (read-only, refcount-bumped)
+        # and the first chunk starts at the first miss token — cached
+        # tokens are never prefilled at all.
         while self.queue and self.free and budget > 0:
             head = self.queue[0]
-            if not self.tables.can_admit(len(head.prompt)
-                                         + head.max_new_tokens):
+            budget_tokens = len(head.prompt) + head.max_new_tokens
+            hit, pages = 0, []
+            if self.prefix is not None:
+                hit, pages = self.prefix.lookup(head.prompt)
+                ok = self.prefix.make_room(self.tables, budget_tokens,
+                                           hit_tokens=hit, protect=pages)
+            else:
+                ok = self.tables.can_admit(budget_tokens)
+            if not ok:
                 break
             slot = min(self.free)       # deterministic: lowest free slot
             self.free.remove(slot)
             req = self.queue.popleft()
-            n = self._chunk(len(req.prompt), budget)
-            self.tables.admit(slot, n, budget_tokens=len(req.prompt)
-                              + req.max_new_tokens)
-            seq = SeqState(req, slot, prefill_done=n, admit_step=step_idx,
+            n = self._chunk(len(req.prompt) - hit, budget)
+            self.tables.admit_prefix(slot, pages, hit, hit + n,
+                                     budget_tokens=budget_tokens)
+            if self.prefix is not None:
+                self.prefix.note(hit, len(req.prompt))
+                cow = self.tables.ensure_writable(slot, hit)
+                self.prefix.cow_copies += len(cow)
+                plan.cow.extend(cow)
+            self.tables.assert_writable(slot, hit, hit + n - 1)
+            seq = SeqState(req, slot, prefill_done=hit + n,
+                           admit_step=step_idx,
                            admit_order=self._admit_order)
             self._admit_order += 1
             self.active[slot] = seq
             plan.admitted.append((req.rid, slot))
-            plan.prefill.append((slot, 0, n,
-                                 np.asarray(req.prompt[:n], np.int32)))
+            plan.prefill.append((slot, hit, n,
+                                 np.asarray(req.prompt[hit:hit + n],
+                                            np.int32)))
             budget -= n
         plan._prompt_lens = {s: seq.prompt_len
                              for s, seq in self.active.items()}
@@ -372,6 +402,11 @@ class TokenBudgetScheduler:
             seq.generated.append(int(tok))
             if kind == "first":
                 seq.ttft_s = now - seq.req.submit_time
+                if self.prefix is not None:
+                    # prefill complete -> its full prompt pages hold real
+                    # KV on device; adopt them into the prefix cache
+                    self.prefix.register(seq.req.prompt,
+                                         self.tables.owned_pages(slot))
             if self._finished(seq):
                 retired.append(seq)
                 del self.active[slot]

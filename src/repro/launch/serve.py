@@ -139,7 +139,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     paged: bool = False, page_size: int = 16,
                     prefill_chunk: int = 0, max_len: int = 0,
                     schedule: str = "legacy", max_batch_tokens: int = 0,
-                    warmup: int = 0):
+                    warmup: int = 0, prefix_cache: bool = False,
+                    shared_prefix: int = 0):
     """Quantize then serve a workload through the engine.
 
     Default (``mixed=False``): ``batch`` uniform-length requests so
@@ -157,14 +158,19 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     ``warmup=N`` (N >= 1) drains the workload once untimed then reports
     the fastest of N steady passes (``run_steady``), so the metrics are
     steady-state and compilation cost lands in the separate
-    ``compile_s`` summary field."""
+    ``compile_s`` summary field. ``prefix_cache=True`` (paged/unified
+    only) shares cached prefix pages across requests copy-on-write and
+    skips their prefill entirely; pair with ``shared_prefix=S`` to give
+    the mixed workload an S-token common system prompt so the cache has
+    something to hit."""
     cfg, model, params, mem = build_served_model(
         arch, transform, w_bits, a_bits, kv_bits, smoke, seed,
         cfg_overrides=cfg_overrides)
 
     n_requests = n_requests or batch
-    if mixed:
-        requests = request_workload(cfg, n_requests, gen=gen, seed=seed)
+    if mixed or shared_prefix:
+        requests = request_workload(cfg, n_requests, gen=gen, seed=seed,
+                                    shared_prefix=shared_prefix)
     else:
         toks = np.asarray(make_batch(cfg, prompt_len, n_requests,
                                      seed=seed)["tokens"])
@@ -175,7 +181,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                          max_len=max_len or max_prompt + gen + 8, mesh=mesh,
                          paged=paged, page_size=page_size,
                          prefill_chunk=prefill_chunk, schedule=schedule,
-                         max_batch_tokens=max_batch_tokens)
+                         max_batch_tokens=max_batch_tokens,
+                         prefix_cache=prefix_cache)
     if warmup:
         results, summary = run_steady(engine, requests, passes=int(warmup))
     else:
@@ -189,7 +196,7 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
         "engine": summary,
         **mem,
     }
-    if not mixed:
+    if not (mixed or shared_prefix):
         out["tokens"] = np.stack([results[i].tokens
                                   for i in range(n_requests)])
     return out
@@ -219,6 +226,12 @@ def validate_flags(ap: argparse.ArgumentParser, args) -> None:
                  f"(got {args.prefill_chunk}, page {args.page_size}); "
                  f"legacy chunks write whole pages — only --schedule "
                  f"unified slices chunks freely")
+    if args.prefix_cache and not (args.paged or unified):
+        ap.error("--prefix-cache needs --paged (or --schedule unified): "
+                 "cached prefixes are shared pages of the paged KV pool")
+    if args.shared_prefix < 0:
+        ap.error(f"--shared-prefix must be >= 0 "
+                 f"(got {args.shared_prefix})")
     if args.max_batch_tokens and not unified:
         ap.error(f"--max-batch-tokens needs --schedule unified "
                  f"(got {args.max_batch_tokens} with --schedule "
@@ -277,6 +290,15 @@ def main() -> None:
     ap.add_argument("--max-batch-tokens", type=int, default=0,
                     help="unified-schedule token budget per step "
                          "(>= --n-slots; default 2×slots)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share cached prompt-prefix pages across "
+                         "requests (refcounted, copy-on-write) and skip "
+                         "their prefill — needs --paged or --schedule "
+                         "unified")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common system-prompt tokens "
+                         "to every request (the workload --prefix-cache "
+                         "hits on; implies the mixed workload)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
     validate_flags(ap, args)
@@ -289,13 +311,20 @@ def main() -> None:
                           paged=args.paged, page_size=args.page_size,
                           prefill_chunk=args.prefill_chunk,
                           schedule=args.schedule,
-                          max_batch_tokens=args.max_batch_tokens)
+                          max_batch_tokens=args.max_batch_tokens,
+                          prefix_cache=args.prefix_cache,
+                          shared_prefix=args.shared_prefix)
     eng = out["engine"]
     mesh_note = (f", mesh={eng['mesh']}" if eng.get("mesh") else "")
     sched_note = ""
     if eng.get("schedule") == "unified":
         sched_note = (f", unified[{eng['max_batch_tokens']}t budget, "
                       f"itl p95 {eng['itl_p95_s'] * 1e3:.0f}ms]")
+    prefix_note = ""
+    if eng.get("prefix_cache"):
+        prefix_note = (f", prefix[{eng['prefix_hit_rate']:.0%} hit, "
+                       f"{eng['prefix_hit_tokens']}t prefill skipped, "
+                       f"{eng['cow_copies']} cow]")
     # KV footprint in BOTH modes (slot-vs-paged rows compare like for
     # like): paged resident bytes track live pages, the slot cache
     # reserves its full capacity up front
@@ -311,7 +340,7 @@ def main() -> None:
           f"ttft {eng['ttft_s_mean'] * 1e3:.0f}ms, "
           f"occupancy {eng['occupancy_mean']:.2f}, "
           f"kv={'int8' if eng['quantized_kv'] else 'fp'}"
-          f"{kv_note}{sched_note}{mesh_note}")
+          f"{kv_note}{prefix_note}{sched_note}{mesh_note}")
     if out.get("qlinear_layers"):
         kind = "int4-packed" if out["packed_int4"] else "int8"
         print(f"  weights: {out['weight_bytes'] / 2**20:.2f} MiB across "

@@ -482,6 +482,16 @@ def init_paged_cache(cfg, n_pages: int, page_size: int) -> dict:
     return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd)}
 
 
+def copy_paged_pages(cfg, cache, src, dst) -> dict:
+    """Copy-on-write device copy for the serve stack: duplicate pool
+    pages ``src`` into ``dst`` on every paged-cache leaf (codes AND
+    scales — a cached quantized page is only bitwise-reusable with its
+    per-token scales moved in lockstep). ``src``/``dst`` (C,) int32,
+    padded with (0, 0) null-page self-copies (inert)."""
+    from repro.models.layers import copy_pool_pages
+    return {k: copy_pool_pages(v, src, dst) for k, v in cache.items()}
+
+
 def prefill(cfg, params, tokens, cache, extra_embed=None, logits_at=None,
             **fwd_kw):
     """Prefill logits come from the last row by default; ``logits_at``

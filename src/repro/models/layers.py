@@ -270,6 +270,16 @@ def paged_cache_update_quantized(ck, cks, cv, cvs, k, v, page_table, pos,
             _write_kv_paged(cvs, vs, page_table, pos))
 
 
+def copy_pool_pages(pool, src, dst):
+    """Copy whole pages ``src`` -> ``dst`` along a pool leaf's page axis
+    (axis 1: leaves are (L, n_pages, page_size, ...)). The prefix cache's
+    copy-on-write split: duplicate a shared page's rows into a private
+    replacement before the new owner writes its divergent rows. ``src``/
+    ``dst`` are (C,) int32; padding pairs are (0, 0) — a null-page
+    self-copy is a no-op write — so the copy keeps one compile shape."""
+    return pool.at[:, dst].set(pool[:, src])
+
+
 def gather_pages(pool, page_table):
     """(n_pages, G, KV, d) pool + (B, n_ptab) table -> the logical
     (B, n_ptab*G, KV, d) view — identical (content and shape) to the

@@ -28,6 +28,10 @@ class Model:
     # (n_pages, page_size) -> paged KV pool; None for families without a
     # paged decode path (ssm/hybrid/encdec keep recurrent or dense state)
     init_paged_cache: Optional[Callable] = None
+    # (cache, src (C,), dst (C,)) -> cache with pages src copied to dst
+    # on every pool leaf — the prefix cache's COW split (None for
+    # families without a paged pool)
+    copy_paged_pages: Optional[Callable] = None
     # (params, tokens (T,1), cache, logit_rows) -> (logits (R,1,V), cache):
     # the unified token-budget step over a flat ragged batch of mixed
     # prefill-chunk + decode rows (None for families without one)
@@ -64,6 +68,10 @@ def build(cfg) -> Model:
             (lambda n_pages, page_size: mod.init_paged_cache(
                 cfg, n_pages, page_size))
             if hasattr(mod, "init_paged_cache") else None),
+        copy_paged_pages=(
+            (lambda cache, src, dst: mod.copy_paged_pages(
+                cfg, cache, src, dst))
+            if hasattr(mod, "copy_paged_pages") else None),
         ragged_step=(
             (lambda params, tokens, cache, logit_rows, **kw:
              mod.ragged_step(cfg, params, tokens, cache, logit_rows, **kw))

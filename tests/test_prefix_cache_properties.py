@@ -1,0 +1,499 @@
+"""Property tests for the refcount/COW prefix-cache layer
+(``repro.launch.paged.PagePool`` refcounts, ``SlotPageTables`` COW, and
+``PrefixCache``), driven two ways:
+
+1. **Pure-host scheduler drive** — the unified scheduler with a
+   ``PrefixCache`` runs its plan/observe loop against a python executor
+   (the stub next-token rule), over workloads of requests sharing system
+   prompts. Invariants checked after EVERY step:
+
+   - refcount conservation: ``pool.total_refs`` equals slot-table
+     mappings plus trie residencies, ``pool.in_use`` equals the distinct
+     union of both, and the null page is never mapped or allocated
+   - shared-marked pages always carry refcount >= 2 (a page is a
+     scatter-write target only at refcount 1)
+   - trajectories match the per-request simulation exactly — prefix
+     sharing must not change a single token
+   - drained: every page returns to the trie or the free heap, slots
+     empty, reservations dropped; ``clear()`` then drains the pool to 0
+
+2. **Direct unit/property tests** — pool free-safety (no double free, no
+   free while shared), COW split semantics and scatter guards, LRU
+   eviction safety, trie longest-prefix lookup against a brute-force
+   oracle, and the missed-pages reservation regression (the worst-case
+   formula head-of-line blocks cache-hit requests an undersized pool can
+   actually serve).
+
+Runs via tests/_hypothesis_shim: property cases when hypothesis is
+installed, the seeded deterministic ports always."""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.launch.paged import (NULL_PAGE, PagePool, PrefixCache,
+                                SlotPageTables)
+from repro.launch.scheduler import Request, TokenBudgetScheduler
+
+_V = 64          # stub vocab
+
+
+def _next_token(tok, pos):
+    """Pure next-token rule mixing token and absolute position (any
+    stale/leaked/mis-copied page changes output)."""
+    return (tok * 7 + pos * 13 + 1) % _V
+
+
+def _simulate(prompt, max_new):
+    toks = list(prompt)
+    tok, pos = int(prompt[-1]), len(prompt) - 1
+    for _ in range(max_new):
+        tok = _next_token(tok, pos)
+        toks.append(tok)
+        pos += 1
+    return toks
+
+
+# ------------------------------------------------------ refcount invariants
+
+def _check_refcounts(pool, tables, prefix, n_slots):
+    """The conservation laws that make sharing safe, checked as one
+    snapshot: every refcount is accounted for by a live mapping."""
+    slot_pages = [p for s in range(n_slots) for p in tables.owned_pages(s)]
+    trie_pages = [n.page for n in prefix._walk()]
+    assert pool.total_refs == len(slot_pages) + len(trie_pages), (
+        "refcount leak: refs != slot mappings + trie residencies")
+    assert prefix.resident == len(trie_pages)
+    assert pool.in_use == len(set(slot_pages) | set(trie_pages)), (
+        "page allocated with no mapping, or mapping to a freed page")
+    assert pool.refcount(NULL_PAGE) == 0
+    assert NULL_PAGE not in slot_pages and NULL_PAGE not in trie_pages
+    assert pool.available + pool.in_use == pool.n_pages - 1
+    for s in range(n_slots):
+        owned = tables.owned_pages(s)
+        for p in tables._shared[s]:
+            assert p in owned, "shared-marked page not in the slot's table"
+            assert pool.refcount(p) >= 2, (
+                "shared-marked page with refcount < 2 — would be treated "
+                "as read-only while actually exclusively owned")
+
+
+def _shared_workload(seed, n_reqs, page_size):
+    """Requests over two seeded system prompts: full-prefix repeats,
+    mid-page divergence (partial hits -> COW), and unrelated prompts."""
+    rng = np.random.default_rng(seed)
+    G = page_size
+    sys1 = rng.integers(0, _V, 3 * G + 1).astype(np.int32)
+    sys2 = rng.integers(0, _V, G).astype(np.int32)
+    reqs = []
+    for rid in range(n_reqs):
+        kind = rng.integers(0, 4)
+        if kind == 0:
+            head = sys1
+        elif kind == 1:
+            head = sys1[:G + 1]           # diverges mid-page -> COW
+        elif kind == 2:
+            head = sys2
+        else:
+            head = sys1[:0]
+        tail = rng.integers(0, _V, int(rng.integers(0, 2 * G + 1)))
+        prompt = np.concatenate([head, tail]).astype(np.int32)
+        if not len(prompt):
+            prompt = np.asarray([int(rng.integers(0, _V))], np.int32)
+        reqs.append(Request(rid, prompt, int(rng.integers(1, 6))))
+    return reqs
+
+
+def _drive_prefix(reqs, n_slots, max_batch_tokens, page_size=4,
+                  prefill_chunk=0, pool_pages=0):
+    """Scheduler plan/pack/observe loop with a PrefixCache, python
+    executor; refcount invariants checked after every step."""
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 1
+    n_ptab = -(-max_len // page_size)
+    n_pages = pool_pages or (1 + n_slots * n_ptab)
+    pool = PagePool(n_pages, page_size)
+    tables = SlotPageTables(pool, n_slots, n_ptab)
+    prefix = PrefixCache(pool, page_size)
+    sched = TokenBudgetScheduler(n_slots, max_batch_tokens, pool=pool,
+                                 tables=tables,
+                                 prefill_chunk=prefill_chunk, prefix=prefix)
+    for r in reqs:
+        sched.queue.append(r)
+    done, guard = {}, 0
+    while not sched.idle:
+        guard += 1
+        assert guard < 20_000, "scheduler failed to drain"
+        plan = sched.plan(guard)
+        packed = sched.pack(plan)
+        toks = [_next_token(int(packed["tokens"][row, 0]),
+                            int(packed["pos"][row]))
+                for row in packed["logit_rows"][:packed["n_logits"]]]
+        for seq in sched.observe(plan, np.asarray(toks), now=0.0):
+            assert seq.req.rid not in done, "retired twice"
+            done[seq.req.rid] = list(seq.req.prompt) + seq.generated
+        _check_refcounts(pool, tables, prefix, n_slots)
+    return sched, pool, tables, prefix, done
+
+
+def _check_prefix_invariants(seed, n_reqs, n_slots, budget_extra,
+                             prefill_chunk, page_size, tight_pool):
+    reqs = _shared_workload(seed, n_reqs, page_size)
+    pool_pages = 0
+    if tight_pool:
+        # just enough for the single largest request plus one spare:
+        # admission must reclaim trie-only pages (LRU eviction) and
+        # head-of-line wait on live slots, yet still drain
+        max_need = max(-(-(len(r.prompt) + r.max_new_tokens) // page_size)
+                       for r in reqs)
+        pool_pages = 1 + max_need + 1
+    sched, pool, tables, prefix, done = _drive_prefix(
+        reqs, n_slots, n_slots + budget_extra, page_size=page_size,
+        prefill_chunk=prefill_chunk, pool_pages=pool_pages)
+    # prefix sharing must not change a single generated token
+    for r in reqs:
+        assert done[r.rid] == _simulate(r.prompt, r.max_new_tokens), r.rid
+    # drained: slots free, reservations dropped, every live page is
+    # trie-resident; clear() then returns the pool to empty
+    assert sorted(sched.free) == list(range(n_slots))
+    assert tables.reserved_unallocated == 0
+    assert pool.in_use == prefix.resident
+    prefix.clear()
+    assert pool.in_use == 0 and pool.total_refs == 0
+    assert pool.available == pool.n_pages - 1
+    assert pool.allocs == pool.frees
+
+
+# --------------------------------------------------------------- property
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n_reqs=st.integers(1, 8),
+    n_slots=st.integers(1, 3),
+    budget_extra=st.integers(0, 10),
+    prefill_chunk=st.integers(0, 5),
+    page_size=st.sampled_from([2, 4]),
+    tight_pool=st.booleans(),
+)
+def test_property_prefix_refcount_invariants(seed, n_reqs, n_slots,
+                                             budget_extra, prefill_chunk,
+                                             page_size, tight_pool):
+    _check_prefix_invariants(seed, n_reqs, n_slots, budget_extra,
+                             prefill_chunk, page_size, tight_pool)
+
+
+# ---------------------------------------------- deterministic seeded ports
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+def test_prefix_refcount_invariants_ports(seed):
+    rng = np.random.default_rng(seed ^ 0xC0)
+    _check_prefix_invariants(
+        seed=seed, n_reqs=int(rng.integers(2, 9)),
+        n_slots=int(rng.integers(1, 4)),
+        budget_extra=int(rng.integers(0, 11)),
+        prefill_chunk=int(rng.integers(0, 6)) if seed % 2 else 0,
+        page_size=4 if seed % 3 else 2,
+        tight_pool=bool(seed % 2))
+
+
+def test_shared_prefix_workload_actually_hits():
+    """Non-vacuousness: identical prompts served sequentially hit the
+    cache (and still token-match the simulation, checked by the drive)."""
+    prompt = np.arange(9, dtype=np.int32) % _V
+    reqs = [Request(rid, prompt, 3) for rid in range(4)]
+    _, pool, _, prefix, _ = _drive_prefix(reqs, n_slots=1,
+                                          max_batch_tokens=6)
+    assert prefix.hits >= 3          # every admission after the first
+    assert prefix.hit_tokens > 0
+    assert 0.0 < prefix.hit_rate <= 1.0
+
+
+# --------------------------------------------------------- pool free-safety
+
+def test_pool_no_double_free_and_no_free_while_shared():
+    pool = PagePool(4, 2)
+    p = pool.alloc()
+    pool.incref(p)                       # rc 2 (a second mapping)
+    with pytest.raises(RuntimeError, match="still shared"):
+        pool.free(p)                     # exclusive free needs rc == 1
+    assert not pool.decref(p)            # rc 2 -> 1: not freed
+    assert pool.decref(p)                # rc 1 -> 0: freed
+    with pytest.raises(RuntimeError, match="double free|not allocated"):
+        pool.decref(p)
+    with pytest.raises(RuntimeError, match="double free|not allocated"):
+        pool.free(p)
+    with pytest.raises(RuntimeError):
+        pool.incref(p)                   # can't re-share a freed page
+    assert pool.in_use == 0 and pool.total_refs == 0
+
+
+@given(ops=st.lists(st.integers(0, 2), max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_property_pool_refcount_conservation(ops):
+    """Random alloc/incref/decref interleavings: conservation holds and
+    a page is never freed while a mapping remains (mirror refcounts)."""
+    pool = PagePool(6, 2)
+    mirror = {}                          # page -> expected refcount
+    for op in ops:
+        if op == 0 and pool.available:
+            p = pool.alloc()
+            assert p not in mirror, "page handed out twice"
+            assert p != NULL_PAGE
+            mirror[p] = 1
+        elif op == 1 and mirror:
+            p = min(mirror)
+            pool.incref(p)
+            mirror[p] += 1
+        elif op == 2 and mirror:
+            p = max(mirror)
+            freed = pool.decref(p)
+            mirror[p] -= 1
+            assert freed == (mirror[p] == 0)
+            if not mirror[p]:
+                del mirror[p]
+        assert pool.total_refs == sum(mirror.values())
+        assert pool.in_use == len(mirror)
+        assert {p: pool.refcount(p) for p in mirror} == mirror
+
+
+# ------------------------------------------------------- COW split semantics
+
+def _cached_prompt(pool, tables, prefix, prompt, slot=0):
+    """Prefill ``prompt`` into ``slot``, register it, release: the trie
+    keeps the full pages alive at refcount 1."""
+    tables.admit(slot, len(prompt), budget_tokens=len(prompt))
+    prefix.register(prompt, tables.owned_pages(slot))
+    tables.release(slot)
+
+
+def test_cow_split_on_partial_shared_page():
+    G = 4
+    pool = PagePool(8, G)
+    tables = SlotPageTables(pool, n_slots=2, n_ptab=4)
+    prefix = PrefixCache(pool, G)
+    prompt = np.arange(8, dtype=np.int32)
+    _cached_prompt(pool, tables, prefix, prompt)
+    hit, pages = prefix.lookup(prompt)
+    assert hit == 7                      # capped at len - 1: partial page
+    tables.admit_prefix(1, pages, hit, 8, budget_tokens=12)
+    p_full, p_part = pages
+    assert pool.refcount(p_full) == pool.refcount(p_part) == 2
+    # the partial shared page is read-only: both write guards fire
+    with pytest.raises(RuntimeError, match="read-only|shared"):
+        tables.assert_writable(1, hit, hit)
+    with pytest.raises(RuntimeError, match="shared"):
+        tables.ensure(1, hit)
+    cow = tables.ensure_writable(1, hit)
+    assert len(cow) == 1
+    src, dst = cow[0]
+    assert src == p_part and dst not in pages
+    assert tables.table[1, 1] == dst and pool.refcount(dst) == 1
+    assert pool.refcount(p_part) == 1    # trie's mapping only
+    tables.assert_writable(1, hit, hit)  # now exclusively owned
+    assert tables.ensure_writable(1, hit) == []   # idempotent
+    # full shared page stays shared and guarded
+    with pytest.raises(RuntimeError, match="read-only|shared"):
+        tables.assert_writable(1, 0, 3)
+    tables.release(1)
+    assert pool.refcount(p_full) == pool.refcount(p_part) == 1
+    prefix.clear()
+    assert pool.in_use == 0
+
+
+def test_page_aligned_hit_needs_no_cow():
+    """A hit ending exactly on a page boundary leaves no partial shared
+    page: first write lands on a fresh page, no COW pair."""
+    G = 4
+    pool = PagePool(8, G)
+    tables = SlotPageTables(pool, n_slots=2, n_ptab=4)
+    prefix = PrefixCache(pool, G)
+    _cached_prompt(pool, tables, prefix, np.arange(8, dtype=np.int32))
+    long = np.concatenate([np.arange(8), 50 + np.arange(4)]).astype(np.int32)
+    hit, pages = prefix.lookup(long)
+    assert hit == 8 and len(pages) == 2
+    tables.admit_prefix(1, pages, hit, 12, budget_tokens=12)
+    assert tables.ensure_writable(1, hit) == []
+    tables.assert_writable(1, hit, 11)
+    tables.release(1)
+    prefix.clear()
+    assert pool.in_use == 0
+
+
+# ------------------------------------ missed-pages reservation (regression)
+
+def test_reservation_counts_only_missed_pages():
+    """Regression for the PR-4 worst-case formula: a cache-hit request
+    whose missed pages fit must admit. Old formula: need =
+    pages_for(budget) = 3 > 2 available -> permanent head-of-line block
+    on a pool the request can actually be served from (1 COW replacement
+    + 1 decode page)."""
+    G = 4
+    pool = PagePool(1 + 4, G)            # 4 allocatable pages
+    tables = SlotPageTables(pool, n_slots=1, n_ptab=3)
+    prefix = PrefixCache(pool, G)
+    prompt = np.arange(8, dtype=np.int32)
+    _cached_prompt(pool, tables, prefix, prompt)
+    assert pool.available == 2           # trie holds the prompt's 2 pages
+    hit, pages = prefix.lookup(prompt)
+    assert hit == 7
+    budget = 8 + 4                       # prompt + gen -> 3 pages worst case
+    assert pool.available < tables.pages_for(budget), (
+        "scenario broken: the old worst-case formula must NOT fit")
+    assert tables.can_admit(budget, hit_tokens=hit), (
+        "missed-pages formula must admit: 2 shared pages already "
+        "allocated, COW + decode need exactly the 2 available")
+    # ...and the admission really is serviceable end to end
+    tables.admit_prefix(0, pages, hit, 8, budget_tokens=budget)
+    assert len(tables.ensure_writable(0, hit)) == 1
+    for pos in range(hit, budget):       # prefill tail + every decode write
+        tables.ensure(0, pos)
+        tables.assert_writable(0, pos, pos)
+    assert pool.available == 0           # sized exactly
+    tables.release(0)
+    prefix.clear()
+    assert pool.in_use == 0
+
+
+def test_reservation_includes_pending_cow_page():
+    """Between admit_prefix (partial hit) and ensure_writable, the COW
+    replacement page is reserved — a concurrent admission cannot steal
+    the last page out from under the pending split."""
+    G = 4
+    pool = PagePool(1 + 3, G)
+    tables = SlotPageTables(pool, n_slots=2, n_ptab=3)
+    prefix = PrefixCache(pool, G)
+    _cached_prompt(pool, tables, prefix, np.arange(8, dtype=np.int32))
+    hit, pages = prefix.lookup(np.arange(8, dtype=np.int32))
+    tables.admit_prefix(0, pages, hit, 8, budget_tokens=8)
+    assert tables._cow_pending[0] == 1
+    assert tables.reserved_unallocated == 1    # the pending COW page
+    assert not tables.can_admit(4), "last page is spoken for"
+    tables.ensure_writable(0, hit)
+    assert tables._cow_pending[0] == 0
+    assert tables.reserved_unallocated == 0
+
+
+# ----------------------------------------------------------- trie lookup
+
+def _brute_force_hit(query, registered, G):
+    """Oracle: best over registered prompts of the common prefix, capped
+    at that prompt's full-page coverage (partial last pages are never
+    cached) and at len(query) - 1 (one token must really prefill)."""
+    cap = len(query) - 1
+    best = 0
+    for q in registered:
+        c = 0
+        for x, y in zip(query, q):
+            if x != y:
+                break
+            c += 1
+        best = max(best, min(c, (len(q) // G) * G, cap))
+    return best
+
+
+def _lookup_case(seed, n_register, n_query, G):
+    rng = np.random.default_rng(seed)
+    pool = PagePool(512, G)
+    tables = SlotPageTables(pool, n_slots=1, n_ptab=64)
+    prefix = PrefixCache(pool, G)
+    base = rng.integers(0, 4, 3 * G).astype(np.int32)   # tiny alphabet:
+    registered = []                                     # heavy overlap
+    for _ in range(n_register):
+        k = int(rng.integers(0, 3 * G))
+        tail = rng.integers(0, 4, int(rng.integers(1, 2 * G)))
+        p = np.concatenate([base[:k], tail]).astype(np.int32)
+        _cached_prompt(pool, tables, prefix, p)
+        registered.append([int(t) for t in p])
+    for _ in range(n_query):
+        k = int(rng.integers(0, 3 * G))
+        tail = rng.integers(0, 4, int(rng.integers(1, 2 * G)))
+        query = [int(t) for t in np.concatenate([base[:k], tail])]
+        hit, pages = prefix.lookup(query)
+        want = _brute_force_hit(query, registered, G)
+        assert hit == want, (query, hit, want)
+        assert len(pages) == -(-hit // G)
+        assert all(pool.refcount(p) >= 1 for p in pages)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n_register=st.integers(0, 8),
+       n_query=st.integers(1, 8), G=st.sampled_from([2, 4]))
+def test_property_trie_lookup_is_longest_prefix(seed, n_register, n_query,
+                                                G):
+    _lookup_case(seed, n_register, n_query, G)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_trie_lookup_is_longest_prefix_ports(seed):
+    rng = np.random.default_rng(seed + 17)
+    _lookup_case(seed, int(rng.integers(1, 9)), int(rng.integers(1, 9)),
+                 4 if seed % 2 else 2)
+
+
+def test_trie_partial_match_picks_best_child():
+    """Two cached prompts diverging mid-page: lookup must take the child
+    with the longer common run, not the first inserted."""
+    G = 4
+    pool = PagePool(32, G)
+    tables = SlotPageTables(pool, n_slots=1, n_ptab=8)
+    prefix = PrefixCache(pool, G)
+    a = np.asarray([1, 2, 3, 4, 5, 6, 7, 8], np.int32)
+    b = np.asarray([1, 2, 3, 4, 5, 6, 9, 9], np.int32)
+    _cached_prompt(pool, tables, prefix, a)
+    _cached_prompt(pool, tables, prefix, b)
+    hit, pages = prefix.lookup([1, 2, 3, 4, 5, 6, 9, 0])
+    assert hit == 7                      # b's child matches 3, a's only 2
+    assert len(pages) == 2
+
+
+# ----------------------------------------------------------- LRU eviction
+
+def test_evict_skips_referenced_and_protected_pages():
+    G = 2
+    pool = PagePool(32, G)
+    tables = SlotPageTables(pool, n_slots=2, n_ptab=8)
+    prefix = PrefixCache(pool, G)
+    a = np.asarray([1, 2, 3, 4, 9], np.int32)
+    b = np.asarray([5, 6, 7, 8, 9], np.int32)
+    _cached_prompt(pool, tables, prefix, a)
+    _cached_prompt(pool, tables, prefix, b)
+    assert prefix.resident == 4
+    # map a's run into a live slot: its pages are pinned (refcount 2)
+    hit, pages = prefix.lookup(a)
+    tables.admit_prefix(0, pages, hit, 5, budget_tokens=5)
+    protect = set()
+    hit_b, pages_b = prefix.lookup(b)
+    protect.update(pages_b[:1])          # protect b's first page
+    freed = prefix.evict(10, protect=frozenset(protect))
+    assert freed == 1                    # only b's second page was free
+    assert all(pool.refcount(p) >= 2 for p in pages)
+    assert pool.refcount(pages_b[0]) == 1
+    _check_refcounts(pool, tables, prefix, 2)
+    # retire the slot: a's pages become evictable again, leaves first
+    tables.release(0)
+    assert prefix.evict(10) == 3
+    assert prefix.resident == 0 and pool.in_use == 0
+
+
+def test_evict_leaves_first_keeps_paths_contiguous():
+    """LRU evicts leaf nodes only, so every surviving root-to-node path
+    stays walkable — a lookup never dead-ends below a hole."""
+    G = 2
+    pool = PagePool(32, G)
+    tables = SlotPageTables(pool, n_slots=1, n_ptab=8)
+    prefix = PrefixCache(pool, G)
+    p = np.asarray([1, 2, 3, 4, 5, 6, 9], np.int32)
+    _cached_prompt(pool, tables, prefix, p)
+    assert prefix.resident == 3
+    assert prefix.evict(1) == 1
+    hit, _ = prefix.lookup(p)
+    assert hit == 4                      # the two inner pages survive
+    for node in prefix._walk():
+        parent = node.parent
+        while parent is not None:        # every ancestor still present
+            assert parent.key in (parent.parent.children
+                                  if parent.parent is not None
+                                  else prefix._root())
+            parent = parent.parent
+    prefix.clear()
+    assert pool.in_use == 0
