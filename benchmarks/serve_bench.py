@@ -35,6 +35,14 @@ common system prompt, served with the copy-on-write prefix cache off and
 on — TTFT p50/p95, prefill tokens skipped, hit rate, and the resident-KV
 dedup ratio, with a token-identity check between the two engines.
 
+Speculative row (``speculative``): self-speculative decoding on the
+int4-packed serving config — an int4 draft proposes k tokens per slot
+per cycle (one fused k-step scan dispatch), the target verifies all k+1
+positions in one ragged step. tok/s and acceptance rate vs the
+non-speculative unified baseline at k in {2, 4}, token-identity checked
+(greedy acceptance makes identity structural; a false here is a bug and
+exits nonzero).
+
 With >= 4 local devices (XLA_FLAGS=--xla_force_host_platform_device_count
 on CPU) it also serves the int4-packed variant tensor-parallel — a tp=1
 vs tp=4 pair on an MHA smoke config, token-identity checked row-to-row.
@@ -269,6 +277,52 @@ def _prefix_rows(rows, n_slots: int, quick: bool = False) -> None:
          f"kv_ratio={ratio:.2f} identical={identical}")
 
 
+def _speculative_rows(rows, quick: bool = False) -> None:
+    """Self-speculative decoding on the int4-packed serving config: a
+    draft pass runs the int4-packed weights fused into one k-step scan
+    dispatch, then the target verifies all k+1 positions per slot in a
+    single ragged invocation. The workload is decode-heavy (short
+    prompts, long gens) because speculation only pays on the decode
+    path — prefill is mirrored into the draft KV pool and so costs
+    roughly double. Greedy acceptance keeps the output token-identical
+    to the non-speculative unified baseline; the row records the check
+    and the run fails loudly if it is ever false."""
+    import numpy as np
+
+    n_requests, n_slots, prompt, gen = ((4, 2, 8, 16) if quick
+                                        else (8, 4, 8, 48))
+    common = dict(arch="catlm_60m", batch=n_requests, prompt_len=prompt,
+                  gen=gen, transform="cat", w_bits=4, a_bits=8, kv_bits=8,
+                  seed=0, n_slots=n_slots, paged=True, schedule="unified",
+                  warmup=1)
+    base = serve_benchmark(**common)
+    row = {
+        "workload": (f"{n_requests} reqs, {prompt}t prompt, gen {gen}, "
+                     "cat w4a8 kv8 target, int4-packed draft"),
+        "baseline_tok_per_s": base["tok_per_s"],
+        "n_requests": n_requests, "n_slots": n_slots,
+    }
+    identical_all = True
+    for k in (2, 4):
+        spec = serve_benchmark(**common, speculative=k)
+        eng = spec["engine"]
+        identical = bool(np.array_equal(base["tokens"], spec["tokens"]))
+        identical_all = identical_all and identical
+        speedup = spec["tok_per_s"] / base["tok_per_s"]
+        row[f"k{k}_tok_per_s"] = spec["tok_per_s"]
+        row[f"k{k}_speedup"] = speedup
+        row[f"k{k}_acceptance_rate"] = eng["spec_acceptance_rate"]
+        row[f"k{k}_drafted_tokens"] = eng["spec_drafted_tokens"]
+        row[f"k{k}_accepted_tokens"] = eng["spec_accepted_tokens"]
+        emit(f"serve_speculative_k{k}", spec["wall_s"] * 1e6,
+             f"tok_per_s={spec['tok_per_s']:.1f} "
+             f"speedup={speedup:.2f}x "
+             f"acceptance={eng['spec_acceptance_rate']:.2f} "
+             f"identical={identical}")
+    row["token_identical"] = identical_all
+    rows["speculative"] = row
+
+
 # results/serve_bench.json layout: {"schema_version": N, "rows": {...}}.
 # Bump on any row-shape change so downstream readers can dispatch.
 # v3: variant rows are steady-state (untimed warmup pass) and carry
@@ -335,6 +389,7 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
             r = rows[q]["tok_per_s"] / rows["fp"]["tok_per_s"]
             emit(f"serve_{q}_vs_fp_steady", 0.0, f"ratio={r:.2f}")
     _prefix_rows(rows, n_slots, quick=quick)
+    _speculative_rows(rows, quick=quick)
     if not quick:
         _paged_rows(rows, n_requests, n_slots)
         _unified_rows(rows, n_slots)
@@ -344,6 +399,13 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
         json.dump({"schema_version": SCHEMA_VERSION, "rows": rows}, f,
                   indent=2)
     emit("serve_bench_json", 0.0, f"{out_path} schema_v{SCHEMA_VERSION}")
+    # hard gate, not just a recorded field: any engine pair drifting out
+    # of token identity is a correctness bug and must fail the run
+    bad = sorted({name for name, row in rows.items()
+                  for key, val in row.items()
+                  if "token_identical" in key and val is False})
+    if bad:
+        raise SystemExit(f"token identity violated in rows: {bad}")
 
 
 if __name__ == "__main__":
@@ -351,9 +413,10 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: 2 requests, variant rows plus a "
-                         "small prefix_shared row (skips the paged/"
-                         "unified/tp sections)")
+                    help="CI smoke: 2 requests, variant rows plus small "
+                         "prefix_shared and speculative rows (skips the "
+                         "paged/unified/tp sections); exits nonzero if "
+                         "any row reports token_identical=false")
     ap.add_argument("--out", default="results/serve_bench.json")
     a = ap.parse_args()
     if a.quick:

@@ -99,7 +99,8 @@ class ServeEngine:
                  prefill_chunk: int = 0, n_pages: int = 0,
                  bucket: bool = True, paged_kernel: bool = False,
                  schedule: str = "legacy", max_batch_tokens: int = 0,
-                 fused: bool = True, prefix_cache: bool = False):
+                 fused: bool = True, prefix_cache: bool = False,
+                 speculative_k: int = 0, draft=None):
         family = getattr(model.cfg, "family", "dense")
         if family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
@@ -109,6 +110,19 @@ class ServeEngine:
         if schedule not in ("legacy", "unified"):
             raise ValueError(f"schedule must be 'legacy' or 'unified', "
                              f"got {schedule!r}")
+        if speculative_k < 0:
+            raise ValueError(
+                f"speculative_k must be >= 0, got {speculative_k}")
+        if speculative_k and schedule != "unified":
+            raise ValueError(
+                "speculative_k needs schedule='unified' (the draft/verify "
+                "cycle runs inside the token-budgeted ragged step)")
+        if speculative_k and draft is None:
+            raise ValueError(
+                "speculative_k needs draft=(draft_model, draft_params) — "
+                "e.g. the int4-packed quantization of the target "
+                "checkpoint (launch.serve.build_draft_model)")
+        self.spec_k = int(speculative_k)
         if schedule == "unified":
             paged = True    # the unified step serves from the paged pool
         elif max_batch_tokens:
@@ -141,8 +155,11 @@ class ServeEngine:
                 raise ValueError(
                     f"prefill_chunk={prefill_chunk} must be a multiple of "
                     f"page_size={page_size} (chunks write whole pages)")
-            # logical rows per slot, rounded up to whole pages
-            self._kv_len = -(-max_len // page_size) * page_size
+            # logical rows per slot, rounded up to whole pages; a
+            # speculative verify writes up to spec_k rows past the last
+            # decode position, so the table covers max_len + spec_k
+            self._kv_len = (-(-(max_len + self.spec_k) // page_size)
+                            * page_size)
             n_ptab = self._kv_len // page_size
             n_pages = n_pages or 1 + n_slots * n_ptab  # worst case + null
             self.pool = PagePool(n_pages, page_size)
@@ -162,11 +179,44 @@ class ServeEngine:
                                 str(getattr(cfg, "dtype", "?"))))
             cache = model.init_paged_cache(n_pages, page_size)
             cache = dict(cache)
+            # Speculative decoding: the draft model's KV lives in a
+            # PARALLEL quantized pool with identical geometry, behind its
+            # own tables (no prefix sharing — draft pages are always
+            # private), admitted/grown/shrunk/released in lockstep with
+            # the target tables by the scheduler.
+            self.draft_pool = self.draft_tables = None
+            draft_exec = None
+            if self.spec_k:
+                draft_model, draft_params = draft
+                if getattr(draft_model, "init_paged_cache", None) is None \
+                        or draft_model.ragged_step is None:
+                    raise NotImplementedError(
+                        "the draft model needs paged-cache + ragged-step "
+                        "support (family "
+                        f"{getattr(draft_model.cfg, 'family', '?')!r})")
+                if draft_model.cfg.vocab != model.cfg.vocab:
+                    raise ValueError(
+                        f"draft vocab {draft_model.cfg.vocab} != target "
+                        f"vocab {model.cfg.vocab} — drafted token ids "
+                        f"must be target token ids")
+                self.draft_pool = PagePool(n_pages, page_size)
+                self.draft_tables = SlotPageTables(self.draft_pool,
+                                                   n_slots, n_ptab)
+                dmsp = getattr(draft_model, "make_serving_params", None)
+                if fused and dmsp is not None:
+                    # the draft always runs single-device plain jit (even
+                    # under a mesh), so it can always take the fused path
+                    draft_params = dmsp(draft_params)
+                draft_cache = dict(
+                    draft_model.init_paged_cache(n_pages, page_size))
+                draft_exec = (draft_model, draft_params, draft_cache)
         else:
             if prefix_cache:
                 raise ValueError("prefix_cache needs paged=True (cached "
                                  "prefixes are shared pool pages)")
             self.prefix = None
+            self.draft_pool = self.draft_tables = None
+            draft_exec = None
             if prefill_chunk:
                 raise ValueError("prefill_chunk needs paged=True (the slot "
                                  "cache keeps whole-prompt prefill; use "
@@ -192,14 +242,27 @@ class ServeEngine:
         tp_kw = dict(mesh=mesh, tp_axis=tp_axis, tp_mode=tp_mode,
                      tp_kernels=tp_kernels)
         if schedule == "unified":
-            self.max_batch_tokens = max_batch_tokens or max(16, 2 * n_slots)
+            # speculative mode packs k+1 verify rows per decoding slot,
+            # so the default budget scales with the spec width and an
+            # explicit budget must still fit every slot's verify item
+            self.max_batch_tokens = max_batch_tokens or max(
+                16, 2 * n_slots, n_slots * (self.spec_k + 2))
+            if self.max_batch_tokens < n_slots * (self.spec_k + 1):
+                raise ValueError(
+                    f"max_batch_tokens={self.max_batch_tokens} must be >= "
+                    f"n_slots*(speculative_k+1)="
+                    f"{n_slots * (self.spec_k + 1)} (every decoding slot "
+                    f"packs speculative_k+1 verify rows per step)")
             self.sched = TokenBudgetScheduler(
                 n_slots, self.max_batch_tokens, pool=self.pool,
                 tables=self.tables, prefill_chunk=prefill_chunk,
-                eos_id=eos_id, prefix=self.prefix)
+                eos_id=eos_id, prefix=self.prefix, spec_k=self.spec_k,
+                draft_tables=self.draft_tables)
             self.exec = RaggedExecutor(model, params, cache,
                                        n_slots=n_slots,
-                                       paged_kernel=paged_kernel, **tp_kw)
+                                       paged_kernel=paged_kernel,
+                                       draft=draft_exec,
+                                       spec_k=self.spec_k, **tp_kw)
             # shared host state lives in the scheduler; alias it so the
             # introspection surface matches legacy mode
             self._queue = self.sched.queue
@@ -257,6 +320,8 @@ class ServeEngine:
             self._free = list(range(self.n_slots))
         if self.paged:
             self.pool.peak_in_use = self.pool.in_use
+        if self.draft_pool is not None:
+            self.draft_pool.peak_in_use = self.draft_pool.in_use
         if self.prefix is not None:
             # a warm cache is server state (like compiled code): keep the
             # trie across warmup/steady resets, zero only the counters
@@ -287,7 +352,9 @@ class ServeEngine:
                 f"prompt({len(prompt)}) + max_new_tokens({max_new_tokens}) "
                 f"exceeds max_len={self.max_len}")
         if self.paged:
-            need = self.tables.pages_for(len(prompt) + max_new_tokens)
+            # +spec_k: speculative verify rows past the decode budget
+            need = self.tables.pages_for(len(prompt) + max_new_tokens
+                                         + self.spec_k)
             if need > self.pool.n_pages - 1:
                 raise ValueError(
                     f"request needs {need} pages but the pool only has "
@@ -300,8 +367,11 @@ class ServeEngine:
               or any(r.rid == rid for r in self._queue)):
             raise ValueError(f"duplicate request id {rid}")
         self._next_rid = max(self._next_rid, rid) + 1
+        # monotonic clock: submit_time is only ever *differenced* against
+        # later perf_counter() reads (TTFT) — wall clock (time.time) can
+        # step under NTP and yield negative latencies
         self._queue.append(Request(rid, prompt, max_new_tokens,
-                                   submit_time=time.time()))
+                                   submit_time=time.perf_counter()))
         return rid
 
     # ---------------------------------------------- legacy slot lifecycle
@@ -393,7 +463,7 @@ class ServeEngine:
             self._pos[slot] = p
             tok = int(np.argmax(np.asarray(logits[0, -1])))
             rec = _Active(req, slot, [tok], self.step_count,
-                          time.time() - req.submit_time)
+                          time.perf_counter() - req.submit_time)
             self.metrics["generated_tokens"] += 1
             self.events.append(("admit", req.rid, slot, self.step_count))
             if self._finished(rec):
@@ -402,8 +472,12 @@ class ServeEngine:
                 self._active[slot] = rec
 
     def _finished(self, rec: _Active) -> bool:
-        return (len(rec.generated) >= rec.req.max_new_tokens
-                or rec.generated[-1] == self.eos_id)
+        # mirrors TokenBudgetScheduler._finished: guard empty generated
+        # and never let eos_id=None shadow a real token id
+        if len(rec.generated) >= rec.req.max_new_tokens:
+            return True
+        return (self.eos_id is not None and bool(rec.generated)
+                and rec.generated[-1] == self.eos_id)
 
     def _retire(self, rec: _Active) -> None:
         rid = rec.req.rid
@@ -494,8 +568,22 @@ class ServeEngine:
         self.metrics["occupancy"].append(occ)
         self.metrics["resident_kv_bytes"].append(self.resident_kv_bytes())
         if plan.n_tokens:
-            packed = self.sched.pack(plan, kernel_desc=self.paged_kernel)
             td = time.perf_counter()
+            if self.spec_k:
+                # draft/verify cycle, all inside the device span:
+                # 1. mirror prefill chunks into the draft pool;
+                # 2. ONE scan dispatch proposes k+1 tokens per slot;
+                # 3. the target verifies all k+1 rows per slot in the
+                #    ragged step below (greedy acceptance in observe()).
+                for dp in self.sched.pack_draft(plan):
+                    self.exec.draft_prefill(dp)
+                if plan.spec:
+                    tok0, pos0, dtable = self.sched.draft_inputs(plan)
+                    drafts = self.exec.draft_k(tok0, pos0, dtable)
+                    plan.spec_drafts = {
+                        slot: drafts[:self.spec_k, slot]
+                        for slot, _, _ in plan.spec}
+            packed = self.sched.pack(plan, kernel_desc=self.paged_kernel)
             if plan.cow:
                 # COW page copies dispatch BEFORE the step so shared
                 # content is duplicated before any divergent row lands
@@ -503,9 +591,13 @@ class ServeEngine:
             logits = self.exec.step(packed)
             dev_s = time.perf_counter() - td
             toks = np.argmax(logits[:packed["n_logits"], -1], axis=-1)
-            retired = self.sched.observe(plan, toks, time.time())
-            self.metrics["generated_tokens"] += int(packed["n_logits"])
-            if plan.decode:
+            gen_before = self.sched.gen_tokens
+            retired = self.sched.observe(plan, toks, time.perf_counter())
+            # actual appended count (speculative steps emit 1..k+1 per
+            # slot depending on acceptance — n_logits would overcount)
+            self.metrics["generated_tokens"] += (self.sched.gen_tokens
+                                                 - gen_before)
+            if plan.decode or plan.spec:
                 self.metrics["decode_steps"] += 1
             for seq in retired:
                 self._retire_seq(seq)
@@ -542,10 +634,10 @@ class ServeEngine:
         ``repro.data.request_workload``) and step until drained."""
         for r in requests or ():
             self.submit(r["tokens"], r["max_new_tokens"], rid=r.get("rid"))
-        t0 = time.time()
+        t0 = time.perf_counter()
         while not self.idle:
             self.step()
-        self.metrics["wall_s"] = time.time() - t0
+        self.metrics["wall_s"] = time.perf_counter() - t0
         return self.results
 
     # ------------------------------------------------------------ metrics
@@ -553,6 +645,10 @@ class ServeEngine:
     def summary(self) -> dict:
         m = self.metrics
         ttfts = [r.ttft_s for r in self.results.values()]
+        # TTFT is a perf_counter difference end-to-end (submit ->
+        # first-logit); negative means a clock regression crept back in
+        assert all(t >= 0 for t in ttfts), \
+            f"negative TTFT (non-monotonic clock?): {min(ttfts)}"
         step_s = m["step_s"]
         dev_s = m["device_s"]
         device_ms = 1e3 * float(np.mean(dev_s)) if dev_s else 0.0
@@ -610,6 +706,15 @@ class ServeEngine:
                 # capped ring and may have evicted the peak step
                 "packed_tokens_max": self.sched.packed_tokens_max}
                if self.schedule == "unified" else {}),
+            **({"speculative_k": self.spec_k,
+                "spec_cycles": self.sched.spec_cycles,
+                "spec_drafted_tokens": self.sched.spec_drafted,
+                "spec_accepted_tokens": self.sched.spec_accepted,
+                "spec_acceptance_rate": (
+                    self.sched.spec_accepted / self.sched.spec_drafted
+                    if self.sched.spec_drafted else 0.0),
+                "draft_pages_peak": self.draft_pool.peak_in_use}
+               if self.spec_k else {}),
             "mesh": (dict(self.mesh.shape) if self.mesh is not None
                      else None),
         }

@@ -104,6 +104,34 @@ def _unified_step(step_fn, paged_kernel, params, cache, tokens, pos,
     return logits, cache
 
 
+# Speculative draft pass: ONE jitted dispatch runs n_steps greedy decode
+# steps of the draft model over its paged pool — lax.scan with on-device
+# argmax between steps, so proposing k tokens costs one host round trip
+# instead of k (the whole point on a dispatch-overhead-bound host).
+# ``decode_fn`` (draft model.decode) and the step count are static; the
+# draft cache is donated for in-place pool updates. Each scan iteration
+# feeds the previous argmax at the next position; ``forward`` advances
+# ``pos`` by 1 per step and threads ``page_table`` through the carry.
+# Returns all n_steps proposed tokens (n_steps, B) — callers use the
+# first k as drafts (the extra step exists so a fully-accepted block's
+# bonus token leaves no draft-KV hole at pos0+k).
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3,))
+def _draft_scan(decode_fn, n_steps, params, cache, tok0, pos0, table):
+    cache = dict(cache, pos=pos0, page_table=table)
+
+    def body(carry, _):
+        tok, cache = carry
+        logits, cache = decode_fn(params, tok, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return (nxt[:, None], cache), nxt
+
+    (_, cache), drafts = jax.lax.scan(body, (tok0, cache), None,
+                                      length=n_steps)
+    cache.pop("pos")
+    cache.pop("page_table")
+    return drafts, cache
+
+
 # COW page copy (prefix caching): duplicate src pages' rows into dst
 # pages across every pool leaf before the step that writes the divergent
 # rows. ``copy_fn`` (model.copy_paged_pages) is static; the cache is
@@ -323,7 +351,8 @@ class LegacyExecutor(_CopyPagesMixin):
     def decode(self, toks: np.ndarray, pos: np.ndarray,
                table=None) -> np.ndarray:
         """One batched decode step over all slots; returns logits
-        (n_slots, 1, V) as numpy."""
+        (n_slots, 1, V) as numpy. Blocks on the result so the engine's
+        timed device span measures execution, not enqueue."""
         self.n_dispatch += 1
         cache = dict(self.cache, pos=jnp.asarray(pos))
         if table is not None:
@@ -332,7 +361,7 @@ class LegacyExecutor(_CopyPagesMixin):
         cache.pop("pos")
         cache.pop("page_table", None)
         self.cache = cache
-        return np.asarray(logits)
+        return np.asarray(jax.block_until_ready(logits))
 
 
 # --------------------------------------------------------- ragged executor
@@ -345,7 +374,8 @@ class RaggedExecutor(_CopyPagesMixin):
     def __init__(self, model, params, cache, *, n_slots: int = 1,
                  paged_kernel: bool = False,
                  mesh=None, tp_axis: str = "model",
-                 tp_mode: str = "gather", tp_kernels: bool = False):
+                 tp_mode: str = "gather", tp_kernels: bool = False,
+                 draft=None, spec_k: int = 0):
         if model.ragged_step is None:
             raise NotImplementedError(
                 f"family {getattr(model.cfg, 'family', '?')!r} has no "
@@ -355,6 +385,16 @@ class RaggedExecutor(_CopyPagesMixin):
         self.paged_kernel = paged_kernel
         self.mesh = mesh
         self.n_dispatch = 0     # device calls issued (hot-loop accounting)
+        # speculative draft side: (model, params, cache) over a parallel
+        # paged pool. Always plain-jit (never shard_mapped): only the
+        # TARGET verify pass determines output tokens, so draft numerics
+        # need determinism, not tp-identity — under a mesh the draft
+        # runs replicated on the default device.
+        self.spec_k = spec_k
+        if draft is not None:
+            self.draft_model, self.draft_params, self.draft_cache = draft
+        else:
+            self.draft_model = self.draft_params = self.draft_cache = None
         if mesh is not None:
             self._init_mesh(mesh, tp_axis, tp_mode, tp_kernels)
 
@@ -409,8 +449,10 @@ class RaggedExecutor(_CopyPagesMixin):
             out_specs=(P(None, None, None), cdict), check_vma=False))
 
     def step(self, packed: dict) -> np.ndarray:
-        """Run one packed unified step; returns logits (n_slots, 1, V)
-        as numpy (only the first ``packed['n_logits']`` rows are real)."""
+        """Run one packed unified step; returns logits (R, 1, V) as numpy
+        (only the first ``packed['n_logits']`` rows are real). Blocks on
+        the result so callers' timed spans measure execution, not
+        enqueue."""
         self.n_dispatch += 1
         tokens = jnp.asarray(packed["tokens"])
         pos = jnp.asarray(packed["pos"])
@@ -423,7 +465,7 @@ class RaggedExecutor(_CopyPagesMixin):
             logits, self.cache = _unified_step(
                 self.model.ragged_step, self.paged_kernel, self.params,
                 self.cache, tokens, pos, ptab, lrows, desc)
-            return np.asarray(logits)
+            return np.asarray(jax.block_until_ready(logits))
         cache = dict(self.cache, pos=pos, page_table=ptab)
         if self.paged_kernel:
             logits, cache = self._mesh_step(self.params, tokens, cache,
@@ -434,4 +476,33 @@ class RaggedExecutor(_CopyPagesMixin):
         cache.pop("pos")
         cache.pop("page_table")
         self.cache = cache
-        return np.asarray(logits)
+        return np.asarray(jax.block_until_ready(logits))
+
+    # ---------------------------------------------------- speculative draft
+
+    def draft_prefill(self, packed: dict) -> None:
+        """Write one packed draft-prefill step's KV into the draft pool
+        (same ragged shape as ``step``, draft params/pool, logits
+        discarded). Plain jit even under a mesh — a separate compile
+        keyed on the draft model's ``ragged_step``."""
+        self.n_dispatch += 1
+        _, self.draft_cache = _unified_step(
+            self.draft_model.ragged_step, False, self.draft_params,
+            self.draft_cache, jnp.asarray(packed["tokens"]),
+            jnp.asarray(packed["pos"]),
+            jnp.asarray(packed["page_table"]),
+            jnp.asarray(packed["logit_rows"]), None)
+
+    def draft_k(self, tok0: np.ndarray, pos0: np.ndarray,
+                table: np.ndarray) -> np.ndarray:
+        """Propose ``spec_k + 1`` greedy tokens per slot in ONE dispatch
+        (``_draft_scan``); returns them as (spec_k + 1, n_slots) numpy.
+        The scan feeds each slot's argmax back at the next position, so
+        the draft pool ends the call holding KV for every proposed
+        position — including the extra row the bonus-token case needs."""
+        self.n_dispatch += 1
+        drafts, self.draft_cache = _draft_scan(
+            self.draft_model.decode, self.spec_k + 1, self.draft_params,
+            self.draft_cache, jnp.asarray(tok0), jnp.asarray(pos0),
+            jnp.asarray(table))
+        return np.asarray(jax.block_until_ready(drafts))

@@ -302,6 +302,34 @@ class SlotPageTables:
             self._owned[slot].append(page)
             self.table[slot, self.n_owned(slot) - 1] = page
 
+    def shrink(self, slot: int, n_tokens: int) -> int:
+        """Speculative-decode rewind: free owned pages lying wholly past
+        logical rows [0, n_tokens) — the page-boundary part of discarding
+        rejected draft positions. No device copy is needed for the rows
+        themselves: stale KV past a slot's valid length is causally
+        masked (q_pos >= kv_pos) and overwritten by the next cycle's
+        scatter before it is ever attendable — only the page *table* must
+        match a never-drafted run so pool accounting (refcounts,
+        can_admit) stays exact. Keeps ``pages_for(n_tokens)`` pages;
+        returns the number freed. Refuses to drop shared pages: the
+        shrink boundary is always at or past the prompt end (drafts start
+        at the last generated token), so prefix-shared prompt pages are
+        structurally out of reach — hitting one means a bookkeeping bug."""
+        keep = self.pages_for(n_tokens)
+        freed = 0
+        while self.n_owned(slot) > keep:
+            page = self._owned[slot][-1]
+            if page in self._shared[slot]:
+                raise RuntimeError(
+                    f"slot {slot} shrink to {n_tokens} tokens would drop "
+                    f"shared page {page} — speculative rewind must never "
+                    f"reach prefix-shared prompt pages")
+            self._owned[slot].pop()
+            self.table[slot, self.n_owned(slot)] = NULL_PAGE
+            self.pool.decref(page)
+            freed += 1
+        return freed
+
     def release(self, slot: int) -> None:
         """Drop all of the slot's page mappings (exactly once; a page is
         freed only when its last mapping — another slot's or the prefix

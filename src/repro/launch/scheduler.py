@@ -92,26 +92,39 @@ class SeqState:
 @dataclasses.dataclass
 class StepPlan:
     """One step's packed work. ``decode``: (slot, fed token, write pos)
-    triples, one per running slot. ``prefill``: (slot, offset, q_len,
-    tokens) chunks. ``admitted``: (rid, slot) pairs admitted this step.
+    triples, one per running slot. ``spec`` (speculative mode): (slot,
+    fed token, base pos) triples — each packs ``spec_width`` = k+1
+    verify rows (the last generated token plus k drafted tokens) instead
+    of one decode row; ``spec_drafts`` maps slot -> the (k,) drafted
+    tokens, filled by the engine after the draft pass and before
+    ``pack``. ``prefill``: (slot, offset, q_len, tokens) chunks;
+    ``draft_prefill`` mirrors them (plus prefix-hit backfill) into the
+    draft pool. ``admitted``: (rid, slot) pairs admitted this step.
     ``cow``: (src, dst) page pairs the executor must device-copy BEFORE
     running the step (copy-on-write splits of partially-shared prefix
-    pages). Logits are consumed in packing order: every decode row, then
-    every prefill chunk that *completes* its prompt
-    (``logit_consumers``)."""
+    pages). Logits are consumed in packing order: every decode row,
+    every spec item's k+1 rows, then every prefill chunk that
+    *completes* its prompt (``logit_consumers``)."""
     decode: list = dataclasses.field(default_factory=list)
+    spec: list = dataclasses.field(default_factory=list)
+    spec_width: int = 1
+    spec_drafts: dict = dataclasses.field(default_factory=dict)
     prefill: list = dataclasses.field(default_factory=list)
+    draft_prefill: list = dataclasses.field(default_factory=list)
     admitted: list = dataclasses.field(default_factory=list)
     cow: list = dataclasses.field(default_factory=list)
 
     @property
     def n_tokens(self) -> int:
-        return len(self.decode) + sum(n for _, _, n, _ in self.prefill)
+        return (len(self.decode) + len(self.spec) * self.spec_width
+                + sum(n for _, _, n, _ in self.prefill))
 
     @property
     def logit_consumers(self) -> list:
-        """[("decode"|"first", slot)] aligned with the packed logit rows."""
+        """[("decode"|"spec"|"first", slot)] aligned with the packed
+        logit rows ("spec" consumes ``spec_width`` rows, others one)."""
         out = [("decode", slot) for slot, _, _ in self.decode]
+        out += [("spec", slot) for slot, _, _ in self.spec]
         for slot, off, n, toks in self.prefill:
             if off + n >= self._prompt_lens[slot]:
                 out.append(("first", slot))
@@ -134,17 +147,30 @@ class TokenBudgetScheduler:
     def __init__(self, n_slots: int, max_batch_tokens: int, *, pool,
                  tables, prefill_chunk: int = 0,
                  eos_id: Optional[int] = None, plan_log_cap: int = 4096,
-                 prefix=None):
-        if max_batch_tokens < n_slots:
+                 prefix=None, spec_k: int = 0, draft_tables=None):
+        if max_batch_tokens < n_slots * (spec_k + 1):
             raise ValueError(
                 f"max_batch_tokens={max_batch_tokens} must be >= "
-                f"n_slots={n_slots} (every running slot decodes one token "
-                f"per step)")
+                f"n_slots*(spec_k+1)={n_slots * (spec_k + 1)} (every "
+                f"running slot packs {spec_k + 1} token(s) per step)")
+        if spec_k and draft_tables is None:
+            raise ValueError("spec_k needs draft_tables (the draft "
+                             "model's parallel paged pool)")
         self.n_slots = n_slots
         self.max_batch_tokens = max_batch_tokens
         self.prefill_chunk = prefill_chunk
         self.eos_id = eos_id
         self.pool, self.tables = pool, tables
+        # speculative decoding: k drafted tokens per decoding slot per
+        # cycle, verified as k+1 packed rows; the draft model's KV lives
+        # in its own pool behind draft_tables (admitted/grown/shrunk/
+        # released in lockstep with the target tables)
+        self.spec_k = spec_k
+        self.draft_tables = draft_tables
+        self.spec_drafted = 0       # drafted tokens offered to verify
+        self.spec_accepted = 0      # drafted tokens the target agreed on
+        self.spec_cycles = 0        # draft/verify cycles run
+        self.gen_tokens = 0         # tokens actually appended (all modes)
         # optional launch.paged.PrefixCache: admission looks up the
         # longest cached prefix and plans prefill only from the first
         # miss token (the hit's pages are mapped shared into the slot)
@@ -176,6 +202,8 @@ class TokenBudgetScheduler:
         self.n_plans = 0
         self._admit_order = 0
         self.free = list(range(self.n_slots))
+        self.spec_drafted = self.spec_accepted = self.spec_cycles = 0
+        self.gen_tokens = 0
 
     # ------------------------------------------------------------ planning
 
@@ -195,32 +223,46 @@ class TokenBudgetScheduler:
 
     def plan(self, step_idx: int) -> StepPlan:
         plan = StepPlan()
+        plan.spec_width = self.spec_k + 1
         budget = self.max_batch_tokens
         # 1. decode: one token per running slot (slot order = packing
         # order, deterministic). Page growth happens here, mirroring the
-        # legacy engine's pre-step ``ensure``.
+        # legacy engine's pre-step ``ensure``. In speculative mode every
+        # decoding slot instead packs a k+1-row verify item (its last
+        # token plus k drafts, positions pos..pos+k) and BOTH pools grow
+        # to cover the drafted positions up front — observe() shrinks the
+        # rejected tail back so page state matches a never-drafted run.
         for slot in sorted(self.active):
             seq = self.active[slot]
             if not seq.decoding:
                 continue
             pos = seq.prompt_len + len(seq.generated) - 1
-            self.tables.ensure(slot, pos)
-            plan.decode.append((slot, seq.generated[-1], pos))
-            budget -= 1
-        # 2. in-flight prefill chunks, oldest admission first
+            if self.spec_k:
+                self.tables.ensure(slot, pos + self.spec_k)
+                self.draft_tables.ensure(slot, pos + self.spec_k)
+                plan.spec.append((slot, seq.generated[-1], pos))
+                budget -= self.spec_k + 1
+            else:
+                self.tables.ensure(slot, pos)
+                plan.decode.append((slot, seq.generated[-1], pos))
+                budget -= 1
+        # 2. in-flight prefill chunks, oldest admission first (mirrored
+        # into the draft pool in speculative mode: the draft model needs
+        # the full prompt's KV before it can propose)
         inflight = sorted((s for s in self.active.values()
                            if not s.decoding), key=lambda s: s.admit_order)
         for seq in inflight:
             if budget <= 0:
                 break
-            n = self._chunk(seq.prompt_len - seq.prefill_done, budget)
-            self.tables.ensure(seq.slot, seq.prefill_done + n - 1)
-            self.tables.assert_writable(seq.slot, seq.prefill_done,
-                                        seq.prefill_done + n - 1)
-            toks = np.asarray(seq.req.prompt[seq.prefill_done:
-                                             seq.prefill_done + n],
-                              np.int32)
-            plan.prefill.append((seq.slot, seq.prefill_done, n, toks))
+            off = seq.prefill_done
+            n = self._chunk(seq.prompt_len - off, budget)
+            self.tables.ensure(seq.slot, off + n - 1)
+            self.tables.assert_writable(seq.slot, off, off + n - 1)
+            toks = np.asarray(seq.req.prompt[off:off + n], np.int32)
+            plan.prefill.append((seq.slot, off, n, toks))
+            if self.spec_k:
+                self.draft_tables.ensure(seq.slot, off + n - 1)
+                plan.draft_prefill.append((seq.slot, off, n, toks))
             seq.prefill_done += n
             budget -= n
         # 3. admission: queue head only (FIFO head-of-line wait). With a
@@ -230,7 +272,10 @@ class TokenBudgetScheduler:
         # tokens are never prefilled at all.
         while self.queue and self.free and budget > 0:
             head = self.queue[0]
-            budget_tokens = len(head.prompt) + head.max_new_tokens
+            # speculative verify writes k rows past the last decode
+            # position, so the worst-case reservation covers them too
+            budget_tokens = (len(head.prompt) + head.max_new_tokens
+                             + self.spec_k)
             hit, pages = 0, []
             if self.prefix is not None:
                 hit, pages = self.prefix.lookup(head.prompt)
@@ -238,6 +283,10 @@ class TokenBudgetScheduler:
                                            hit_tokens=hit, protect=pages)
             else:
                 ok = self.tables.can_admit(budget_tokens)
+            if ok and self.spec_k:
+                # the draft pool shares no prefix pages — it needs full
+                # worst-case capacity even on a target-pool cache hit
+                ok = self.draft_tables.can_admit(budget_tokens)
             if not ok:
                 break
             slot = min(self.free)       # deterministic: lowest free slot
@@ -252,6 +301,28 @@ class TokenBudgetScheduler:
                 self.prefix.cow_copies += len(cow)
                 plan.cow.extend(cow)
             self.tables.assert_writable(slot, hit, hit + n - 1)
+            if self.spec_k:
+                self.draft_tables.admit(slot, 0,
+                                        budget_tokens=budget_tokens)
+                # the draft pool never shares prefix pages, so a target
+                # cache hit still needs the hit region prefilled into the
+                # draft pool — backfill it as extra draft-only chunks
+                # (they ride outside the token budget: draft work is a
+                # separate cheap dispatch, not verify-batch rows)
+                cap = self._chunk(self.max_batch_tokens,
+                                  self.max_batch_tokens)
+                off = 0
+                while off < hit:
+                    dn = min(cap, hit - off)
+                    self.draft_tables.ensure(slot, off + dn - 1)
+                    plan.draft_prefill.append(
+                        (slot, off, dn,
+                         np.asarray(req.prompt[off:off + dn], np.int32)))
+                    off += dn
+                self.draft_tables.ensure(slot, hit + n - 1)
+                plan.draft_prefill.append(
+                    (slot, hit, n,
+                     np.asarray(req.prompt[hit:hit + n], np.int32)))
             seq = SeqState(req, slot, prefill_done=hit + n,
                            admit_step=step_idx,
                            admit_order=self._admit_order)
@@ -267,7 +338,8 @@ class TokenBudgetScheduler:
         self.packed_tokens_max = max(self.packed_tokens_max, plan.n_tokens)
         self.n_plans += 1
         self.plan_log.append((plan.n_tokens,
-                              tuple(s for s, _, _ in plan.decode),
+                              tuple(s for s, _, _ in plan.decode)
+                              + tuple(s for s, _, _ in plan.spec),
                               tuple(s for s, _, _, _ in plan.prefill),
                               tuple(r for r, _ in plan.admitted)))
         return plan
@@ -285,11 +357,14 @@ class TokenBudgetScheduler:
             T, R, n_ptab = (self.max_batch_tokens, self.n_slots,
                             self.tables.n_ptab)
             q_width = min(T, self.prefill_chunk) if self.prefill_chunk else T
+            # a spec verify item is k+1 rows (and its consumer reads k+1
+            # logit rows) — widen the per-item and logit buffers for it
+            q_width = max(q_width, self.spec_k + 1)
             self._buf = {
                 "tokens": np.zeros((T,), np.int32),
                 "pos": np.zeros((T,), np.int32),
                 "slot_of": np.empty((T,), np.int32),
-                "logit_rows": np.zeros((R,), np.int32),
+                "logit_rows": np.zeros((R * (self.spec_k + 1),), np.int32),
                 "ptab": np.zeros((T, n_ptab), np.int32),
                 "qidx": np.zeros((R, q_width), np.int32),
                 "qpos": np.empty((R, q_width), np.int32),
@@ -332,6 +407,17 @@ class TokenBudgetScheduler:
             items.append((slot, i, 1, p))
             last_row[slot] = i
             i += 1
+        K1 = plan.spec_width
+        spec_start = {}                 # slot -> its verify item's first row
+        for slot, tok, p in plan.spec:
+            # verify item: [last token, k drafts] at positions p..p+k
+            tokens[i] = tok
+            tokens[i + 1:i + K1] = plan.spec_drafts[slot]
+            pos[i:i + K1] = p + np.arange(K1)
+            slot_of[i:i + K1] = slot
+            items.append((slot, i, K1, p + K1 - 1))
+            spec_start[slot] = i
+            i += K1
         for slot, off, n, toks in plan.prefill:
             tokens[i:i + n] = toks
             pos[i:i + n] = off + np.arange(n)
@@ -341,17 +427,24 @@ class TokenBudgetScheduler:
             i += n
         # logit rows derive from the SAME consumer list observe() zips
         # over — single-sourced so the row/consumer alignment cannot
-        # drift (each consumer reads its slot's last packed row)
+        # drift (each consumer reads its slot's last packed row; a spec
+        # consumer reads all k+1 of its item's rows)
         consumers = plan.logit_consumers
         logit_rows = buf["logit_rows"]
-        for j, (_kind, slot) in enumerate(consumers):
-            logit_rows[j] = last_row[slot]
+        j = 0
+        for kind, slot in consumers:
+            if kind == "spec":
+                logit_rows[j:j + K1] = spec_start[slot] + np.arange(K1)
+                j += K1
+            else:
+                logit_rows[j] = last_row[slot]
+                j += 1
         ptab = buf["ptab"]
         valid = slot_of >= 0
         ptab[valid] = self.tables.table[slot_of[valid]]
         packed = {"tokens": tokens[:, None], "pos": pos,
                   "page_table": ptab, "logit_rows": logit_rows,
-                  "n_logits": len(consumers)}
+                  "n_logits": j}
         if kernel_desc:
             packed["ragged_desc"] = self._kernel_desc(items, buf)
         return packed
@@ -386,20 +479,150 @@ class TokenBudgetScheduler:
         return {"qidx": qidx, "qpos": qpos, "lengths": lengths,
                 "table": table, "inv_seq": inv_seq, "inv_qi": inv_qi}
 
+    # ------------------------------------------------------- draft packing
+
+    def _draft_buf(self) -> dict:
+        """Separate reused buffers for draft-prefill packing — ``pack``
+        runs after the draft dispatches each cycle, so the main ``_buf``
+        views must stay untouched until then."""
+        if not hasattr(self, "_dbuf") or not self._dbuf:
+            T, n_ptab = self.max_batch_tokens, self.draft_tables.n_ptab
+            self._dbuf = {
+                "tokens": np.zeros((T,), np.int32),
+                "pos": np.zeros((T,), np.int32),
+                "slot_of": np.empty((T,), np.int32),
+                "ptab": np.zeros((T, n_ptab), np.int32),
+                "logit_rows": np.zeros(
+                    (self.n_slots * (self.spec_k + 1),), np.int32),
+            }
+        b = self._dbuf
+        for name in ("tokens", "pos", "ptab"):
+            b[name][...] = 0
+        b["slot_of"].fill(-1)
+        return b
+
+    def pack_draft(self, plan: StepPlan):
+        """Yield packed draft-prefill steps (same fixed (T, 1) ragged
+        shape as the target step, against the DRAFT page tables). Chunks
+        are grouped greedily up to the token budget; logits are never
+        consumed (the draft only needs its KV written). Each yielded dict
+        reuses one buffer set — the executor copies to device before the
+        next iteration."""
+        entries = plan.draft_prefill
+        gi = 0
+        while gi < len(entries):
+            buf = self._draft_buf()
+            tokens, pos, slot_of = (buf["tokens"], buf["pos"],
+                                    buf["slot_of"])
+            i = 0
+            while gi < len(entries):
+                slot, off, n, toks = entries[gi]
+                if i + n > self.max_batch_tokens:
+                    assert i > 0, (n, self.max_batch_tokens)
+                    break
+                tokens[i:i + n] = toks
+                pos[i:i + n] = off + np.arange(n)
+                slot_of[i:i + n] = slot
+                i += n
+                gi += 1
+            ptab = buf["ptab"]
+            valid = slot_of >= 0
+            ptab[valid] = self.draft_tables.table[slot_of[valid]]
+            yield {"tokens": tokens[:, None], "pos": pos,
+                   "page_table": ptab, "logit_rows": buf["logit_rows"],
+                   "n_logits": 0}
+
+    def draft_inputs(self, plan: StepPlan):
+        """Host inputs for the k-step draft scan: (tok0 (n_slots, 1),
+        pos0 (n_slots,), table (n_slots, n_ptab)). Non-drafting slots
+        (free, or mid-prefill) feed a dummy token at position 0 against
+        the NULL table row so their scan writes are inert — their real
+        draft pages must not be touched."""
+        tok0 = np.zeros((self.n_slots, 1), np.int32)
+        pos0 = np.zeros((self.n_slots,), np.int32)
+        table = np.zeros_like(self.draft_tables.table)
+        for slot, tok, p in plan.spec:
+            tok0[slot, 0] = tok
+            pos0[slot] = p
+            table[slot] = self.draft_tables.table[slot]
+        return tok0, pos0, table
+
     # ---------------------------------------------------------- observation
 
     def _finished(self, seq: SeqState) -> bool:
-        return (len(seq.generated) >= seq.req.max_new_tokens
-                or seq.generated[-1] == self.eos_id)
+        # Guard the empty-generated case explicitly (a spec verify step
+        # can consult this mid-append) and never treat eos_id=None as
+        # token 0 — ``None == tok`` is False today only by accident of
+        # int/None comparison, so make the intent structural.
+        if len(seq.generated) >= seq.req.max_new_tokens:
+            return True
+        return (self.eos_id is not None and bool(seq.generated)
+                and seq.generated[-1] == self.eos_id)
+
+    def _retire_slot(self, seq: SeqState, retired: list) -> None:
+        retired.append(seq)
+        del self.active[seq.slot]
+        self.tables.release(seq.slot)
+        if self.draft_tables is not None:
+            self.draft_tables.release(seq.slot)
+        self.free.append(seq.slot)
+
+    def _observe_spec(self, plan: StepPlan, seq: SeqState,
+                      ys: np.ndarray, retired: list) -> None:
+        """Greedy acceptance for one verify item: every row of ``ys`` is
+        the target's argmax given [prompt, generated, drafts[:j]] — append
+        row j while the drafts keep matching (longest accepted prefix),
+        then the first mismatching row IS the target's correction, and a
+        fully-accepted block earns the bonus token from the last row.
+        Every appended token is a target argmax, which is the whole
+        token-identity argument. Afterwards both pools shrink back to the
+        true sequence length so page tables and refcounts equal a
+        never-drafted run's."""
+        k = self.spec_k
+        slot = seq.slot
+        drafts = plan.spec_drafts[slot]
+        self.spec_cycles += 1
+        self.spec_drafted += k
+        done = False
+        for j in range(k):
+            tok = int(ys[j])
+            seq.generated.append(tok)
+            self.gen_tokens += 1
+            accepted = tok == int(drafts[j])
+            if accepted:
+                self.spec_accepted += 1
+            done = self._finished(seq)
+            if done or not accepted:
+                break
+        else:
+            # all k drafts accepted -> the k+1-th row is a free token
+            seq.generated.append(int(ys[k]))
+            self.gen_tokens += 1
+            done = self._finished(seq)
+        if done:
+            self._retire_slot(seq, retired)
+        else:
+            valid = seq.prompt_len + len(seq.generated) - 1
+            self.tables.shrink(slot, valid)
+            self.draft_tables.shrink(slot, valid)
 
     def observe(self, plan: StepPlan, toks: np.ndarray, now: float) -> list:
         """Apply one step's argmax tokens (aligned with
-        ``plan.logit_consumers``); returns the retired ``SeqState``s (slot
-        freed, pages released — the engine turns them into results)."""
+        ``plan.logit_consumers``; a "spec" consumer takes ``spec_width``
+        rows); returns the retired ``SeqState``s (slot freed, pages
+        released — the engine turns them into results)."""
         retired = []
-        for (kind, slot), tok in zip(plan.logit_consumers, toks):
+        i = 0
+        for kind, slot in plan.logit_consumers:
             seq = self.active[slot]
-            seq.generated.append(int(tok))
+            if kind == "spec":
+                self._observe_spec(plan, seq,
+                                   toks[i:i + plan.spec_width], retired)
+                i += plan.spec_width
+                continue
+            seq.generated.append(int(toks[i]))
+            self.gen_tokens += 1
+            i += 1
             if kind == "first":
                 seq.ttft_s = now - seq.req.submit_time
                 if self.prefix is not None:
@@ -408,10 +631,7 @@ class TokenBudgetScheduler:
                     self.prefix.register(seq.req.prompt,
                                          self.tables.owned_pages(slot))
             if self._finished(seq):
-                retired.append(seq)
-                del self.active[slot]
-                self.tables.release(slot)
-                self.free.append(slot)
+                self._retire_slot(seq, retired)
         return retired
 
     @property

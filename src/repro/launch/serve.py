@@ -116,6 +116,21 @@ def build_served_model(arch: str, transform: str, w_bits: int, a_bits: int,
     return cfg, model, params, mem
 
 
+def build_draft_model(arch: str, smoke: bool, seed: int,
+                      cfg_overrides: Optional[dict] = None,
+                      a_bits: int = 8):
+    """The speculative-decoding draft: the SAME checkpoint as the target
+    (same arch/seed init), quantized to int4-packed weights with the
+    paper's CAT transform — the paper's accuracy claim turned into a
+    serving lever. The draft serves from its own int8-KV paged pool, so
+    ``kv_quant_bits=8`` regardless of the target's cache dtype.
+    -> (draft_model, draft_params) for ``ServeEngine(draft=...)``."""
+    cfg, model, params, _ = build_served_model(
+        arch, "cat", 4, a_bits, 8, smoke, seed,
+        cfg_overrides=cfg_overrides)
+    return model, params
+
+
 def parse_mesh(spec: str):
     """``--mesh dp,tp`` -> a ("data", "model") device mesh (None when the
     spec is empty or 1,1). Needs dp*tp local devices — force host devices
@@ -140,7 +155,7 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     prefill_chunk: int = 0, max_len: int = 0,
                     schedule: str = "legacy", max_batch_tokens: int = 0,
                     warmup: int = 0, prefix_cache: bool = False,
-                    shared_prefix: int = 0):
+                    shared_prefix: int = 0, speculative: int = 0):
     """Quantize then serve a workload through the engine.
 
     Default (``mixed=False``): ``batch`` uniform-length requests so
@@ -162,10 +177,17 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     only) shares cached prefix pages across requests copy-on-write and
     skips their prefill entirely; pair with ``shared_prefix=S`` to give
     the mixed workload an S-token common system prompt so the cache has
-    something to hit."""
+    something to hit. ``speculative=k`` (unified only) drafts k tokens
+    per slot per cycle with the int4-packed quantization of the same
+    checkpoint and verifies them in one ragged target step — output
+    stays token-identical to ``speculative=0``."""
     cfg, model, params, mem = build_served_model(
         arch, transform, w_bits, a_bits, kv_bits, smoke, seed,
         cfg_overrides=cfg_overrides)
+    draft = None
+    if speculative:
+        draft = build_draft_model(arch, smoke, seed,
+                                  cfg_overrides=cfg_overrides)
 
     n_requests = n_requests or batch
     if mixed or shared_prefix:
@@ -182,7 +204,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                          paged=paged, page_size=page_size,
                          prefill_chunk=prefill_chunk, schedule=schedule,
                          max_batch_tokens=max_batch_tokens,
-                         prefix_cache=prefix_cache)
+                         prefix_cache=prefix_cache,
+                         speculative_k=speculative, draft=draft)
     if warmup:
         results, summary = run_steady(engine, requests, passes=int(warmup))
     else:
@@ -247,6 +270,19 @@ def validate_flags(ap: argparse.ArgumentParser, args) -> None:
                      f"--mesh 1,tp (got --mesh {args.mesh}; the paged "
                      f"pool is a global allocation and cannot shard over "
                      f"a data axis)")
+    if args.speculative < 0:
+        ap.error(f"--speculative must be >= 0 (got {args.speculative})")
+    if args.speculative and not unified:
+        ap.error(f"--speculative needs --schedule unified (got "
+                 f"--schedule {args.schedule}; the draft/verify cycle "
+                 f"runs inside the token-budgeted ragged step)")
+    if (args.speculative and args.max_batch_tokens
+            and args.max_batch_tokens < args.batch *
+            (args.speculative + 1)):
+        ap.error(f"--max-batch-tokens must be >= --n-slots × "
+                 f"(--speculative + 1) (got {args.max_batch_tokens}, "
+                 f"need {args.batch * (args.speculative + 1)}; every "
+                 f"decoding slot packs k+1 verify rows per step)")
 
 
 def main() -> None:
@@ -299,6 +335,12 @@ def main() -> None:
                     help="prepend this many common system-prompt tokens "
                          "to every request (the workload --prefix-cache "
                          "hits on; implies the mixed workload)")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="draft K tokens per slot per cycle with the "
+                         "int4-packed quantization of the same checkpoint "
+                         "and verify all K+1 positions in one ragged "
+                         "target step (greedy acceptance — output stays "
+                         "token-identical; needs --schedule unified)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
     validate_flags(ap, args)
@@ -313,13 +355,19 @@ def main() -> None:
                           schedule=args.schedule,
                           max_batch_tokens=args.max_batch_tokens,
                           prefix_cache=args.prefix_cache,
-                          shared_prefix=args.shared_prefix)
+                          shared_prefix=args.shared_prefix,
+                          speculative=args.speculative)
     eng = out["engine"]
     mesh_note = (f", mesh={eng['mesh']}" if eng.get("mesh") else "")
     sched_note = ""
     if eng.get("schedule") == "unified":
         sched_note = (f", unified[{eng['max_batch_tokens']}t budget, "
                       f"itl p95 {eng['itl_p95_s'] * 1e3:.0f}ms]")
+    spec_note = ""
+    if eng.get("speculative_k"):
+        spec_note = (f", spec[k={eng['speculative_k']}, "
+                     f"{eng['spec_acceptance_rate']:.0%} accepted, "
+                     f"{eng['spec_drafted_tokens']}t drafted]")
     prefix_note = ""
     if eng.get("prefix_cache"):
         prefix_note = (f", prefix[{eng['prefix_hit_rate']:.0%} hit, "
@@ -340,7 +388,7 @@ def main() -> None:
           f"ttft {eng['ttft_s_mean'] * 1e3:.0f}ms, "
           f"occupancy {eng['occupancy_mean']:.2f}, "
           f"kv={'int8' if eng['quantized_kv'] else 'fp'}"
-          f"{kv_note}{prefix_note}{sched_note}{mesh_note}")
+          f"{kv_note}{spec_note}{prefix_note}{sched_note}{mesh_note}")
     if out.get("qlinear_layers"):
         kind = "int4-packed" if out["packed_int4"] else "int8"
         print(f"  weights: {out['weight_bytes'] / 2**20:.2f} MiB across "

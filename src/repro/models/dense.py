@@ -497,11 +497,17 @@ def prefill(cfg, params, tokens, cache, extra_embed=None, logits_at=None,
     """Prefill logits come from the last row by default; ``logits_at``
     (traced scalar) instead slices the row at that index — the hook that
     lets chunked/bucketed prefill pad tokens on the right and still read
-    logits at the true last prompt token."""
+    logits at the true last prompt token. A (R,) *vector* ``logits_at``
+    gathers R rows instead (logits (B, R, V)) — the multi-row read
+    speculative verification needs when checking k+1 positions of one
+    forward at once (``launch.scheduler``/``ragged_step`` use the packed
+    equivalent)."""
     hidden, _, cache = forward(cfg, params, tokens, extra_embed=extra_embed,
                                cache=cache, **fwd_kw)
     if logits_at is None:
         hidden = hidden[:, -1:]
+    elif getattr(logits_at, "ndim", 0):
+        hidden = jnp.take(hidden, logits_at, axis=1)
     else:
         hidden = jax.lax.dynamic_slice_in_dim(hidden, logits_at, 1, axis=1)
     return logits_fn(cfg, params, hidden), cache
