@@ -88,6 +88,48 @@ def hot_path_bytes_per_token(cfg, w_bits: int = 4,
             "total": weight_bytes + act}
 
 
+def decode_launches_per_layer(fused_prologue: bool = True) -> dict:
+    """Analytic device-launch count per transformer layer per decode
+    step on the paged serving path (§Serving). The attention block is
+    where the launch pressure lives at batch 1 — each launch is a
+    kernel dispatch whose fixed overhead rivals the tiny per-token
+    compute:
+
+      * composed (``fused_prologue=False``): the CAT->quant->W4A8 QKV
+        GEMV kernel, then an XLA glue program (RoPE rotation + int8 KV
+        quantize + paged-pool scatter), then the online-softmax paged
+        attention kernel — 3 launches.
+      * fused (``fused_prologue=True``): the QKV prologue kernel
+        absorbs the transform, activation quant, GEMV, RoPE, KV
+        quantize and pool scatter behind one scalar-prefetched grid,
+        leaving prologue + paged attention — the two-launch decode.
+
+    The epilogue (o-proj and the MLP) already runs through the fused
+    CAT GEMV kernels either way and is listed for the per-layer total.
+    HBM bytes/token are unchanged by the fusion (same weights, same KV
+    writes — see ``hot_path_bytes_per_token``); the win is launches.
+    Returns {"attention", "epilogue", "total"} launches per layer."""
+    attention = 2 if fused_prologue else 3
+    epilogue = 2                   # o-proj GEMV + fused MLP GEMV chain
+    return {"attention": attention, "epilogue": epilogue,
+            "total": attention + epilogue}
+
+
+def decode_launch_table() -> str:
+    """Launches per decode layer, composed vs fused-prologue — the
+    companion column to ``serve_bytes_table`` (bytes/token identical,
+    launch count is the mover)."""
+    hdr = (f"{'path':18s} {'attention':>10s} {'epilogue':>9s} "
+           f"{'total':>6s}")
+    lines = ["device launches per decode layer (paged serving path)",
+             hdr, "-" * len(hdr)]
+    for name, fused in (("composed", False), ("fused prologue", True)):
+        c = decode_launches_per_layer(fused_prologue=fused)
+        lines.append(f"{name:18s} {c['attention']:>10d} "
+                     f"{c['epilogue']:>9d} {c['total']:>6d}")
+    return "\n".join(lines)
+
+
 def serve_bytes_table(arch: str = "catlm_60m", smoke: bool = True) -> str:
     """Per-token HBM traffic of the serving hot path, fused vs unfused,
     at the bench's weight widths — the roofline context for the
@@ -292,10 +334,17 @@ def main() -> None:
     ap.add_argument("--serve-bytes", action="store_true",
                     help="print the analytic serving hot-path HBM "
                          "bytes/token table (fused vs unfused) and exit")
+    ap.add_argument("--launches", action="store_true",
+                    help="print the per-decode-layer device-launch "
+                         "table (composed vs fused QKV prologue) and "
+                         "exit")
     args = ap.parse_args()
 
-    if args.serve_bytes:
-        print(serve_bytes_table(args.arch or "catlm_60m"))
+    if args.serve_bytes or args.launches:
+        if args.serve_bytes:
+            print(serve_bytes_table(args.arch or "catlm_60m"))
+        if args.launches:
+            print(decode_launch_table())
         return
     if args.measure:
         measure_cells(args.cells,

@@ -97,6 +97,8 @@ def _tp_rows(rows, n_requests, n_slots, gen) -> None:
             "ttft_s_mean": eng["ttft_s_mean"],
             "tok_per_s": eng["tok_per_s"],
             "occupancy_mean": eng["occupancy_mean"],
+            "dispatch_per_step": eng["dispatch_per_step"],
+            "launches_per_token": eng["launches_per_token"],
             "n_requests": eng["n_requests"], "n_slots": eng["n_slots"],
         }
         emit(f"serve_{name}", eng["wall_s"] * 1e6,
@@ -151,6 +153,8 @@ def _paged_rows(rows, n_requests: int, n_slots: int) -> None:
             "prefill_chunk": ps["prefill_chunk"],
             "slot_tok_per_s": ss["tok_per_s"],
             "paged_tok_per_s": ps["tok_per_s"],
+            "dispatch_per_step": ps["dispatch_per_step"],
+            "launches_per_token": ps["launches_per_token"],
             "slot_ttft_s_mean": ss["ttft_s_mean"],
             "paged_ttft_s_mean": ps["ttft_s_mean"],
             "token_identical": bool(identical),
@@ -206,6 +210,8 @@ def _unified_rows(rows, n_slots: int) -> None:
         "legacy_tok_per_s": ls["tok_per_s"],
         "unified_tok_per_s": us["tok_per_s"],
         "unified_packed_tokens_max": us["packed_tokens_max"],
+        "dispatch_per_step": us["dispatch_per_step"],
+        "launches_per_token": us["launches_per_token"],
         "token_identical": bool(identical),
         "n_requests": len(reqs), "n_slots": n_slots,
     }
@@ -267,6 +273,8 @@ def _prefix_rows(rows, n_slots: int, quick: bool = False) -> None:
         "on_resident_kv_bytes_peak": en["resident_kv_bytes_peak"],
         "on_cached_kv_bytes": en["cached_kv_bytes"],
         "off_tok_per_s": eo["tok_per_s"], "on_tok_per_s": en["tok_per_s"],
+        "dispatch_per_step": en["dispatch_per_step"],
+        "launches_per_token": en["launches_per_token"],
         "token_identical": bool(identical),
         "n_requests": n_requests, "n_slots": n_slots,
     }
@@ -300,6 +308,8 @@ def _speculative_rows(rows, quick: bool = False) -> None:
         "workload": (f"{n_requests} reqs, {prompt}t prompt, gen {gen}, "
                      "cat w4a8 kv8 target, int4-packed draft"),
         "baseline_tok_per_s": base["tok_per_s"],
+        "dispatch_per_step": base["engine"]["dispatch_per_step"],
+        "launches_per_token": base["engine"]["launches_per_token"],
         "n_requests": n_requests, "n_slots": n_slots,
     }
     identical_all = True
@@ -314,6 +324,7 @@ def _speculative_rows(rows, quick: bool = False) -> None:
         row[f"k{k}_acceptance_rate"] = eng["spec_acceptance_rate"]
         row[f"k{k}_drafted_tokens"] = eng["spec_drafted_tokens"]
         row[f"k{k}_accepted_tokens"] = eng["spec_accepted_tokens"]
+        row[f"k{k}_launches_per_token"] = eng["launches_per_token"]
         emit(f"serve_speculative_k{k}", spec["wall_s"] * 1e6,
              f"tok_per_s={spec['tok_per_s']:.1f} "
              f"speedup={speedup:.2f}x "
@@ -327,8 +338,36 @@ def _speculative_rows(rows, quick: bool = False) -> None:
 # Bump on any row-shape change so downstream readers can dispatch.
 # v3: variant rows are steady-state (untimed warmup pass) and carry
 # compile_s + the gap-attribution fields (hot_path_kib_per_token,
-# device_ms_mean/host_ms_mean, dispatch_per_step, fused).
+# device_ms_mean/host_ms_mean, dispatch_per_step, fused). Engine rows
+# additionally carry launches_per_token (host dispatches amortized over
+# emitted tokens — the serving-level launch-pressure column the
+# two-launch decode work moves).
 SCHEMA_VERSION = 3
+
+
+def _dispatch_gate(rows: dict, out_path: str) -> list:
+    """--quick regression gate: compare each row's ``dispatch_per_step``
+    against the previously recorded artifact at ``out_path`` (same
+    schema, same quick-mode workload). A rise above 5% means the engine
+    started issuing more device dispatches per step — exactly the
+    launch-pressure regression the fused decode path exists to prevent.
+    Returns the offending row descriptions (empty = pass / no
+    baseline)."""
+    try:
+        with open(out_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError):
+        return []           # no baseline recorded yet: nothing to gate
+    if (base.get("schema_version") != SCHEMA_VERSION
+            or not base.get("quick")):
+        return []           # full-run baselines use a different workload
+    bad = []
+    for name, row in rows.items():
+        ref = base.get("rows", {}).get(name, {}).get("dispatch_per_step")
+        cur = row.get("dispatch_per_step")
+        if ref and cur and cur > ref * 1.05:
+            bad.append(f"{name}: {cur:.3f} > baseline {ref:.3f}")
+    return bad
 
 
 def _hot_path_kib(w_bits: int, fused: bool) -> float:
@@ -374,6 +413,7 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
             "device_ms_mean": eng["device_ms_mean"],
             "host_ms_mean": eng["host_ms_mean"],
             "dispatch_per_step": eng["dispatch_per_step"],
+            "launches_per_token": eng["launches_per_token"],
         }
         emit(f"serve_{name}", eng["wall_s"] * 1e6,
              f"tok_per_s={eng['tok_per_s']:.1f} "
@@ -394,10 +434,11 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
         _paged_rows(rows, n_requests, n_slots)
         _unified_rows(rows, n_slots)
         _tp_rows(rows, n_requests, n_slots, gen)
+    regressed = _dispatch_gate(rows, out_path) if quick else []
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump({"schema_version": SCHEMA_VERSION, "rows": rows}, f,
-                  indent=2)
+        json.dump({"schema_version": SCHEMA_VERSION, "quick": quick,
+                   "rows": rows}, f, indent=2)
     emit("serve_bench_json", 0.0, f"{out_path} schema_v{SCHEMA_VERSION}")
     # hard gate, not just a recorded field: any engine pair drifting out
     # of token identity is a correctness bug and must fail the run
@@ -406,6 +447,9 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
                   if "token_identical" in key and val is False})
     if bad:
         raise SystemExit(f"token identity violated in rows: {bad}")
+    if regressed:
+        raise SystemExit("dispatch_per_step regressed vs the recorded "
+                         f"baseline: {regressed}")
 
 
 if __name__ == "__main__":
@@ -416,7 +460,9 @@ if __name__ == "__main__":
                     help="CI smoke: 2 requests, variant rows plus small "
                          "prefix_shared and speculative rows (skips the "
                          "paged/unified/tp sections); exits nonzero if "
-                         "any row reports token_identical=false")
+                         "any row reports token_identical=false or "
+                         "dispatch_per_step regresses >5% above the "
+                         "previously recorded --quick artifact")
     ap.add_argument("--out", default="results/serve_bench.json")
     a = ap.parse_args()
     if a.quick:

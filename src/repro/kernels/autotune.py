@@ -107,5 +107,22 @@ def gemv_blocks(d: int, n: int, packed: bool,
     return tn, tk
 
 
+def prologue_blocks(d: int, n: int, n_kv: int, packed: bool,
+                    budget: int = VMEM_BUDGET) -> tuple[int, int]:
+    """-> (block_n, block_k) for the fused decode QKV prologue.
+
+    Same shape family as the GEMV (M fixed at 8), but the kernel keeps
+    extra VMEM resident for the whole launch: the full-N f32 QKV
+    accumulator (the RoPE/KV epilogue reads all columns at once) and the
+    K/V code+scale epilogue scratches — carve those out of the budget
+    before sizing the streamed weight block.
+    """
+    acc = 8 * n * 4                       # (8, N_pad) f32 accumulator
+    kv = 2 * (8 * n_kv + 8 * n_kv * 4)    # int8 codes + f32 scale bound
+    return gemv_blocks(d, n, packed, budget=max(budget - acc - kv,
+                                                budget // 8))
+
+
 __all__: Sequence[str] = ("pick", "heuristic_blocks", "gemv_blocks",
-                          "cache_info", "cache_clear", "VMEM_BUDGET")
+                          "prologue_blocks", "cache_info", "cache_clear",
+                          "VMEM_BUDGET")

@@ -1,0 +1,293 @@
+"""Pallas TPU kernel: the whole decode-attention QKV prologue in ONE launch.
+
+``decode_qkv_prologue`` extends ``fused_cat_gemv_w4``'s scratch dataflow
+through everything that sits between the hidden state and the paged
+attention kernel on the decode path: block-CAT/Hadamard transform ->
+dynamic act quant -> packed W4A8 QKV GEMV -> RoPE(q, k) -> symmetric
+int8 KV quantization -> scatter of the new K/V rows into the paged pool
+via the scalar-prefetched page table. With it, a transformer layer's
+decode attention block is exactly **two** Pallas launches: this prologue
+and the existing online-softmax paged attention — the composed path's
+XLA glue (rope, quantize, 4 scatter dispatches) disappears into the
+prologue's epilogue.
+
+Dataflow (grid (gn, gk, M) with the row axis r innermost so weight
+blocks are DMA'd once per (j, kk) — Pallas skips re-fetch while the
+block index is unchanged):
+
+    (j, kk, r) == (0, 0, 0):                   # once per launch
+        x (8, D) --HBM--> VMEM -> CAT -> sign ⊙ -> Hadamard
+        -> per-token asym quant -> qx/sx/zx scratch
+    every (j, kk) at r == 0:                   # the contraction
+        qw block (TK/2, TN) --HBM--> VMEM -> unpack
+        acc[:, j·TN:..] (+)= sx·sw·(qx @ qw − zx·colsum)
+    last (j, kk) at r == 0:                    # the epilogue
+        acc -> split q|k|v columns -> RoPE(q, k) with per-row positions
+        -> q out; quantize_kv(k), quantize_kv(v) -> code/scale scratch
+    last (j, kk), every r:                     # the paged scatter
+        row r's (KVH, hd) codes + (KVH, 1) scales -> pool out blocks
+        whose index maps target (page_ids[r], row_ids[r])
+
+The four pool leaves ride through ``input_output_aliases`` so every page
+row the grid does not target keeps its prior content; before the final
+(j, kk) sweep the pool out-spec index maps park on the reserved null
+page (0, 0) — inert by the pool contract, exactly like the composed
+path's padded ``_write_kv_paged`` rows. Padded batch rows (M < 8) pass
+``page_ids == row_ids == 0`` and land there too.
+
+Numerics: the RoPE and KV-quant stages mirror ``models.layers.rope`` /
+``quantize_kv`` op for op in f32 and the contraction is exact int32, but
+XLA contracts the kernel's fused f32 chains (``x1·cos − x2·sin`` becomes
+mul+FMA inside the jitted launch) so agreement with the eager
+``ref.decode_qkv_prologue`` oracle is rtol ~1e-6, same caveat as
+``fused_cat_matmul_w4``; the int8 KV codes — the values paged attention
+actually reads — round identically and are pinned bitwise by the tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .fused_cat_matmul import _prep_operands, _transform_quant
+from .quant_matmul_w4 import _GEMV_M, _unpack_block
+
+
+def _rope_rows(y, pos_f32, head_dim: int, theta: float):
+    """RoPE over flat (M, H*hd) rows with per-row f32 positions (M, 1) —
+    mirrors ``models.layers.rope`` op for op (all f32)."""
+    m, hn = y.shape
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos_f32 * freq[None, :]               # (M, half)
+    cos = jnp.cos(ang)[:, None, :]              # (M, 1, half)
+    sin = jnp.sin(ang)[:, None, :]
+    yh = y.reshape(m, hn // head_dim, head_dim)
+    x1, x2 = yh[..., :half], yh[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out
+
+
+def _quantize_kv_rows(t, bits: int):
+    """``models.layers.quantize_kv`` op for op: symmetric per-(row, head)
+    int8 codes + f32 scales over the last axis."""
+    qmax = 2.0 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    codes = jnp.clip(jnp.round(t / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return codes, scale
+
+
+def _make_prologue_kernel(*, act_bits: int, packed: bool, has_blocks: bool,
+                          tk: int, tn: int, k_pad: int, gn: int, gk: int,
+                          n_q: int, n_kv: int, head_dim: int,
+                          rope_theta: float, kv_bits: int):
+    kvh = n_kv // head_dim
+
+    def kernel(*refs):
+        (pid_ref, rid_ref), refs = refs[:2], refs[2:]
+        if has_blocks:
+            (x_ref, sign_ref, ha_ref, hb_ref, blocks_ref, w_ref, sw_ref,
+             pos_ref), refs = refs[:8], refs[8:]
+        else:
+            (x_ref, sign_ref, ha_ref, hb_ref, w_ref, sw_ref,
+             pos_ref), refs = refs[:7], refs[7:]
+            blocks_ref = None
+        (_kin, _ksin, _vin, _vsin,                    # aliased, unread
+         qo_ref, ko_ref, kso_ref, vo_ref, vso_ref,
+         qx_ref, sx_ref, zx_ref, acc_ref,
+         kq_ref, ks_ref, vq_ref, vs_ref) = refs
+        j = pl.program_id(0)
+        kk = pl.program_id(1)
+        r = pl.program_id(2)
+        last_jk = (j == gn - 1) & (kk == gk - 1)
+
+        @pl.when((j == 0) & (kk == 0) & (r == 0))
+        def _prep():
+            _transform_quant(x_ref, sign_ref, ha_ref, hb_ref, blocks_ref,
+                             qx_ref, sx_ref, zx_ref, act_bits=act_bits,
+                             k_pad=k_pad)
+
+        @pl.when(r == 0)
+        def _contract():
+            qx = qx_ref[:, pl.ds(kk * tk, tk)].astype(jnp.int32)
+            qw = (_unpack_block(w_ref[...]) if packed
+                  else w_ref[...].astype(jnp.int32))
+            acc = jnp.dot(qx, qw,
+                          preferred_element_type=jnp.int32).astype(jnp.float32)
+            colsum = jnp.sum(qw, axis=0, keepdims=True).astype(jnp.float32)
+            part = sx_ref[...] * sw_ref[...] * (acc - zx_ref[...] * colsum)
+
+            @pl.when(kk == 0)
+            def _set():
+                acc_ref[:, pl.ds(j * tn, tn)] = part
+
+            @pl.when(kk != 0)
+            def _add():
+                acc_ref[:, pl.ds(j * tn, tn)] += part
+
+        @pl.when(last_jk & (r == 0))
+        def _epilogue():
+            y = acc_ref[...]                        # (8, N_pad) f32
+            posf = pos_ref[...].astype(jnp.float32)  # (8, 1)
+            qo_ref[...] = _rope_rows(y[:, :n_q], posf, head_dim,
+                                     rope_theta).reshape(_GEMV_M, n_q)
+            k = _rope_rows(y[:, n_q:n_q + n_kv], posf, head_dim, rope_theta)
+            v = y[:, n_q + n_kv:n_q + 2 * n_kv].reshape(_GEMV_M, kvh,
+                                                        head_dim)
+            kq, ks = _quantize_kv_rows(k, kv_bits)
+            vq, vs = _quantize_kv_rows(v, kv_bits)
+            kq_ref[...] = kq
+            ks_ref[...] = ks
+            vq_ref[...] = vq
+            vs_ref[...] = vs
+
+        @pl.when(last_jk)
+        def _scatter():
+            ko_ref[...] = kq_ref[r][None, None]     # (1, 1, KVH, hd)
+            kso_ref[...] = ks_ref[r][None, None]
+            vo_ref[...] = vq_ref[r][None, None]
+            vso_ref[...] = vs_ref[r][None, None]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_q", "head_dim", "rope_theta", "kv_bits", "act_bits", "packed",
+    "block_n", "block_k", "interpret"))
+def decode_qkv_prologue(x, blocks, ha, hb, sign, qw, sw,
+                        k_pool, k_scale, v_pool, v_scale,
+                        page_ids, row_ids, positions, *,
+                        n_q: int, head_dim: int, rope_theta: float,
+                        kv_bits: int = 8, act_bits: int = 8,
+                        packed: bool = True, block_n: int = 256,
+                        block_k: int = 512, interpret: bool = True):
+    """Fused decode QKV prologue: one launch from hidden rows to rope'd
+    q plus the paged pool with the step's K/V rows scattered in.
+
+    x           (B, D) fp normed hidden rows, B <= 8 (decode batch)
+    blocks/ha/hb/sign  CAT transform operands (``fused_transform_operands``)
+    qw          (ceil(D/2), N) packed int4 — or (D, N) int8 — QKV weight,
+                N = n_q + 2·n_kv columns laid out [q | k | v]
+    sw          (1, N) f32 weight scales
+    k/v_pool    (n_pages, page_size, KVH, hd) int8 pool leaves
+    k/v_scale   (n_pages, page_size, KVH, 1) f32 pool leaves
+    page_ids    (B,) int32 physical page per row (0 = null page for
+                padded/invalid rows — the write is inert)
+    row_ids     (B,) int32 row within the page
+    positions   (B,) int32 absolute position per row (RoPE angle)
+    -> (q (B, n_q) f32 rope'd, k_pool', k_scale', v_pool', v_scale')
+
+    The pool operands are aliased into the outputs (donated); rows not
+    targeted by ``page_ids``/``row_ids`` keep their prior content.
+    """
+    m, d = x.shape
+    assert m <= _GEMV_M, f"decode prologue is for B<=8 rows, got B={m}"
+    n = qw.shape[1]
+    n_kv = (n - n_q) // 2
+    assert n_q + 2 * n_kv == n, (n_q, n)
+    assert n_q % head_dim == 0 and n_kv % head_dim == 0, (n_q, n_kv,
+                                                          head_dim)
+    n_pages, page_size, kvh, hd = k_pool.shape
+    assert hd == head_dim and kvh == n_kv // head_dim, (k_pool.shape, n_kv)
+    tk = min(block_k, d + d % 2)
+    tk += tk % 2
+    tn = min(block_n, n)
+    x, qw, sw, dims = _prep_operands(x, blocks, ha, hb, sign, qw, sw,
+                                     packed, _GEMV_M, tn, tk)
+    k_pad, n_pad = dims["k_pad"], qw.shape[1]
+    gn = n_pad // tn
+    gk = k_pad // tk
+
+    def _pad8(v):
+        v = jnp.asarray(v, jnp.int32)
+        return jnp.pad(v, (0, _GEMV_M - v.shape[0])) if v.shape[0] < _GEMV_M \
+            else v
+
+    page_ids = _pad8(page_ids)
+    row_ids = _pad8(row_ids)
+    pos8 = _pad8(positions)[:, None]
+
+    has_blocks = blocks is not None
+    kern = _make_prologue_kernel(
+        act_bits=act_bits, packed=packed, has_blocks=has_blocks, tk=tk,
+        tn=tn, k_pad=k_pad, gn=gn, gk=gk, n_q=n_q, n_kv=n_kv,
+        head_dim=head_dim, rope_theta=rope_theta, kv_bits=kv_bits)
+
+    def _pool_idx(j, kk, r, pid, rid):
+        # park on the inert null page until the final (j, kk) sweep — the
+        # only flushes that reach real rows carry the finished epilogue
+        last = (j == gn - 1) & (kk == gk - 1)
+        return (jnp.where(last, pid[r], 0), jnp.where(last, rid[r], 0),
+                0, 0)
+
+    def _null_idx(j, kk, r, pid, rid):
+        return (0, 0, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((_GEMV_M, d), lambda j, kk, r, pid, rid: (0, 0)),
+        pl.BlockSpec((d,), lambda j, kk, r, pid, rid: (0,)),
+        pl.BlockSpec(ha.shape, lambda j, kk, r, pid, rid: (0, 0)),
+        pl.BlockSpec(hb.shape, lambda j, kk, r, pid, rid: (0, 0)),
+    ]
+    operands = [x, sign, ha, hb]
+    if has_blocks:
+        in_specs.append(pl.BlockSpec(blocks.shape,
+                                     lambda j, kk, r, pid, rid: (0, 0, 0)))
+        operands.append(blocks)
+    in_specs += [
+        pl.BlockSpec((tk // 2 if packed else tk, tn),
+                     lambda j, kk, r, pid, rid: (kk, j)),
+        pl.BlockSpec((1, tn), lambda j, kk, r, pid, rid: (0, j)),
+        pl.BlockSpec((_GEMV_M, 1), lambda j, kk, r, pid, rid: (0, 0)),
+        # aliased pool leaves: blocked on the null page, never read
+        pl.BlockSpec((1, 1, kvh, hd), _null_idx),
+        pl.BlockSpec((1, 1, kvh, 1), _null_idx),
+        pl.BlockSpec((1, 1, kvh, hd), _null_idx),
+        pl.BlockSpec((1, 1, kvh, 1), _null_idx),
+    ]
+    operands += [qw, sw, pos8, k_pool, k_scale, v_pool, v_scale]
+    # alias indices count ALL pallas_call operands, scalar prefetch first:
+    # pid=0, rid=1, then `operands` — pools are the last four
+    pool0 = 2 + len(operands) - 4
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # page_ids, row_ids
+        grid=(gn, gk, _GEMV_M),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((_GEMV_M, n_q), lambda j, kk, r, pid, rid: (0, 0)),
+            pl.BlockSpec((1, 1, kvh, hd), _pool_idx),
+            pl.BlockSpec((1, 1, kvh, 1), _pool_idx),
+            pl.BlockSpec((1, 1, kvh, hd), _pool_idx),
+            pl.BlockSpec((1, 1, kvh, 1), _pool_idx),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((_GEMV_M, k_pad), jnp.int8),      # act codes
+            pltpu.VMEM((_GEMV_M, 1), jnp.float32),       # act scale
+            pltpu.VMEM((_GEMV_M, 1), jnp.float32),       # act zero point
+            pltpu.VMEM((_GEMV_M, n_pad), jnp.float32),   # qkv accumulator
+            pltpu.VMEM((_GEMV_M, kvh, hd), jnp.int8),    # k codes
+            pltpu.VMEM((_GEMV_M, kvh, 1), jnp.float32),  # k scales
+            pltpu.VMEM((_GEMV_M, kvh, hd), jnp.int8),    # v codes
+            pltpu.VMEM((_GEMV_M, kvh, 1), jnp.float32),  # v scales
+        ],
+    )
+    q8, kp, ksc, vp, vsc = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((_GEMV_M, n_q), jnp.float32),
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(k_scale.shape, k_scale.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+            jax.ShapeDtypeStruct(v_scale.shape, v_scale.dtype),
+        ],
+        input_output_aliases={pool0: 1, pool0 + 1: 2, pool0 + 2: 3,
+                              pool0 + 3: 4},
+        interpret=interpret,
+    )(page_ids, row_ids, *operands)
+    return q8[:m], kp, ksc, vp, vsc

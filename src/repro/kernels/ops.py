@@ -9,10 +9,13 @@ the same BlockSpecs drive Mosaic codegen.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 from .block_matmul import block_diag_matmul
+from .decode_layer import decode_qkv_prologue as _decode_qkv_prologue
 from .dynamic_quant import dynamic_quant
 from .fused_cat_matmul import fused_cat_gemv_w4, fused_cat_matmul_w4
 from .hadamard import hadamard_transform
@@ -23,9 +26,38 @@ from .paged_attention import (paged_attention_decode,
 from .quant_matmul import quant_matmul
 from .quant_matmul_w4 import _GEMV_M, quant_gemv_w4, quant_matmul_w4
 
+_FALSY = ("", "0", "false", "no", "off")
+
 
 def default_interpret() -> bool:
+    """Whether pallas_call should run in interpret mode.
+
+    ``REPRO_PALLAS_INTERPRET`` overrides in BOTH directions (``1`` forces
+    interpret even on TPU — useful for oracle-exact debugging; ``0``
+    forces Mosaic codegen); unset, interpret follows the backend so CPU
+    CI executes every kernel body in Python instead of silently skipping
+    kernel-vs-oracle coverage.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in _FALSY
     return jax.default_backend() != "tpu"
+
+
+def use_fused_decode() -> bool:
+    """Whether decode layers route through the two-launch fused path
+    (``decode_qkv_prologue`` + paged attention).
+
+    ``REPRO_DECODE_FUSED`` overrides in both directions (``1`` enables it
+    off-TPU — interpret mode, used by the parity tests; ``0`` pins the
+    composed path); unset, it follows the backend like the other fused
+    kernels, so off-TPU golden fixtures keep the composed path's exact
+    numerics.
+    """
+    env = os.environ.get("REPRO_DECODE_FUSED")
+    if env is not None:
+        return env.strip().lower() not in _FALSY
+    return jax.default_backend() == "tpu"
 
 
 def hadamard(x, ha, hb, sign=None, **kw):
@@ -205,6 +237,38 @@ def fused_cat_matmul(x, blocks, ha, hb, sign, qw, sw, act_bits: int = 8,
         y = fused_cat_matmul_w4(xf, blocks, ha, hb, sign, qw, sw,
                                 act_bits=act_bits, packed=packed, **kw)
     return y.reshape(*lead, n).astype(x.dtype)
+
+
+def decode_qkv_prologue(x, blocks, ha, hb, sign, qw, sw,
+                        k_pool, k_scale, v_pool, v_scale,
+                        page_ids, row_ids, positions, *,
+                        n_q: int, head_dim: int, rope_theta: float,
+                        kv_bits: int = 8, act_bits: int = 8,
+                        packed: bool = True, **kw):
+    """One-launch decode QKV prologue (``kernels/decode_layer.py``):
+    CAT -> dynamic quant -> W4A8 QKV GEMV -> RoPE -> int8 KV quant ->
+    paged-pool scatter. Together with the paged-attention kernel this
+    makes a decode layer's attention block exactly two launches.
+
+    Returns (q (B, n_q) f32 rope'd, k_pool', k_scale', v_pool',
+    v_scale') with the pool leaves donated through
+    ``input_output_aliases``. Block sizes come from
+    ``autotune.prologue_blocks`` unless passed explicitly.
+    """
+    from . import autotune
+
+    kw.setdefault("interpret", default_interpret())
+    if "block_n" not in kw or "block_k" not in kw:
+        n_kv = (qw.shape[1] - n_q) // 2
+        tn, tk = autotune.prologue_blocks(x.shape[-1], qw.shape[1], n_kv,
+                                          packed)
+        kw.setdefault("block_n", tn)
+        kw.setdefault("block_k", tk)
+    return _decode_qkv_prologue(
+        x, blocks, ha, hb, sign, qw, sw, k_pool, k_scale, v_pool, v_scale,
+        page_ids, row_ids, positions, n_q=n_q, head_dim=head_dim,
+        rope_theta=rope_theta, kv_bits=kv_bits, act_bits=act_bits,
+        packed=packed, **kw)
 
 
 def paged_attention(q, k_pages, k_scale, v_pages, v_scale, page_table,

@@ -157,6 +157,84 @@ def fused_hadamard_quant(x, ha, hb, sign, bits: int = 8):
     return dynamic_quant(y, bits=bits, symmetric=False)
 
 
+def kernel_transform_quant(x, blocks, ha, hb, sign, *, act_bits: int = 8):
+    """CAT transform + dynamic quant in the KERNEL's exact op order.
+
+    Mirrors ``fused_cat_matmul._transform_quant`` operation for operation
+    (per-block dots, two Kronecker-factor dots with the same
+    reshape/transpose walk, then ``dynamic_quant`` rounding) instead of
+    ``hadamard_transform``'s single einsum — f32 dot association is the
+    only difference, and matching it makes oracles built on this helper
+    **bitwise** against the fused kernels rather than rtol-close.
+    Returns (q int8 (M, D), scale f32 (M, 1), zp f32 (M, 1)).
+    """
+    xf = x.astype(jnp.float32)
+    m, d = xf.shape
+    if blocks is not None:
+        nblk, bk, _ = blocks.shape
+        parts = [jnp.dot(xf[:, bi * bk:(bi + 1) * bk],
+                         blocks[bi].astype(jnp.float32).T,
+                         preferred_element_type=jnp.float32)
+                 for bi in range(nblk)]
+        xf = jnp.concatenate(parts, axis=1)
+    xf = xf * sign.astype(jnp.float32)
+    a, b = ha.shape[0], hb.shape[0]
+    y = jnp.dot(xf.reshape(m * a, b), hb.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32)
+    y = y.reshape(m, a, b).swapaxes(1, 2).reshape(m * b, a)
+    y = jnp.dot(y, ha.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32)
+    y = y.reshape(m, b, a).swapaxes(1, 2).reshape(m, d)
+    return dynamic_quant(y, bits=act_bits, symmetric=False)
+
+
+def decode_qkv_prologue(x, blocks, ha, hb, sign, qw, sw,
+                        k_pool, k_scale, v_pool, v_scale,
+                        page_ids, row_ids, positions, *,
+                        n_q: int, head_dim: int, rope_theta: float,
+                        kv_bits: int = 8, act_bits: int = 8,
+                        packed: bool = True):
+    """Oracle for ``kernels.decode_layer.decode_qkv_prologue`` — the
+    one-launch decode QKV prologue (CAT -> quant -> W4A8 QKV GEMV ->
+    RoPE -> KV int8 quant -> paged scatter).
+
+    Composes ``kernel_transform_quant`` (kernel op order) + the exact
+    int32 ``quant_matmul`` + ``models.layers.rope`` + ``quantize_kv`` +
+    the ``_write_kv_paged`` scatter. Agreement with the kernel is rtol
+    ~1e-6 on the f32 outputs (XLA FMA-contracts the fused mul/sub chains
+    inside the jitted launch; this eager composition keeps them
+    separate) while the scattered int8 KV codes round identically and
+    match bitwise. The kernel additionally parks padded batch rows and
+    intermediate flushes on the null page — page 0 is outside the
+    contract and excluded from comparison.
+    """
+    from repro.models.layers import quantize_kv, rope
+
+    m, _ = x.shape
+    n = qw.shape[1]
+    n_kv = (n - n_q) // 2
+    kvh = n_kv // head_dim
+    q8, sx, zx = kernel_transform_quant(x, blocks, ha, hb, sign,
+                                        act_bits=act_bits)
+    w = unpack_int4(qw, x.shape[1]) if packed else qw
+    y = quant_matmul(q8, sx, zx, w, sw)
+    pos = positions.astype(jnp.int32)[:, None]                  # (M, 1)
+    q = rope(y[:, :n_q].reshape(m, 1, n_q // head_dim, head_dim),
+             pos, theta=rope_theta).reshape(m, n_q)
+    k = rope(y[:, n_q:n_q + n_kv].reshape(m, 1, kvh, head_dim),
+             pos, theta=rope_theta).reshape(m, kvh, head_dim)
+    v = y[:, n_q + n_kv:].reshape(m, kvh, head_dim)
+    kq, ks = quantize_kv(k, bits=kv_bits)
+    vq, vs = quantize_kv(v, bits=kv_bits)
+    pids = page_ids.astype(jnp.int32)
+    rows = row_ids.astype(jnp.int32)
+    k_pool = k_pool.at[pids, rows].set(kq, mode="drop")
+    k_scale = k_scale.at[pids, rows].set(ks, mode="drop")
+    v_pool = v_pool.at[pids, rows].set(vq, mode="drop")
+    v_scale = v_scale.at[pids, rows].set(vs, mode="drop")
+    return q, k_pool, k_scale, v_pool, v_scale
+
+
 def fused_cat_matmul_w4(x, blocks, ha, hb, sign, qw, sw, *,
                         act_bits: int = 8, packed: bool = True,
                         out_dtype=jnp.float32) -> jnp.ndarray:

@@ -100,7 +100,8 @@ class ServeEngine:
                  bucket: bool = True, paged_kernel: bool = False,
                  schedule: str = "legacy", max_batch_tokens: int = 0,
                  fused: bool = True, prefix_cache: bool = False,
-                 speculative_k: int = 0, draft=None):
+                 speculative_k: int = 0, draft=None,
+                 adaptive_spec: bool = False):
         family = getattr(model.cfg, "family", "dense")
         if family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
@@ -122,6 +123,9 @@ class ServeEngine:
                 "speculative_k needs draft=(draft_model, draft_params) — "
                 "e.g. the int4-packed quantization of the target "
                 "checkpoint (launch.serve.build_draft_model)")
+        if adaptive_spec and not speculative_k:
+            raise ValueError("adaptive_spec needs speculative_k > 0 "
+                             "(it tunes the per-slot draft depth)")
         self.spec_k = int(speculative_k)
         if schedule == "unified":
             paged = True    # the unified step serves from the paged pool
@@ -257,7 +261,8 @@ class ServeEngine:
                 n_slots, self.max_batch_tokens, pool=self.pool,
                 tables=self.tables, prefill_chunk=prefill_chunk,
                 eos_id=eos_id, prefix=self.prefix, spec_k=self.spec_k,
-                draft_tables=self.draft_tables)
+                draft_tables=self.draft_tables,
+                adaptive_spec=adaptive_spec)
             self.exec = RaggedExecutor(model, params, cache,
                                        n_slots=n_slots,
                                        paged_kernel=paged_kernel,
@@ -583,14 +588,32 @@ class ServeEngine:
                     plan.spec_drafts = {
                         slot: drafts[:self.spec_k, slot]
                         for slot, _, _ in plan.spec}
-            packed = self.sched.pack(plan, kernel_desc=self.paged_kernel)
-            if plan.cow:
-                # COW page copies dispatch BEFORE the step so shared
-                # content is duplicated before any divergent row lands
-                self.exec.copy_pages(plan.cow)
-            logits = self.exec.step(packed)
-            dev_s = time.perf_counter() - td
-            toks = np.argmax(logits[:packed["n_logits"], -1], axis=-1)
+            if (plan.decode and not plan.prefill and not plan.spec
+                    and not plan.cow and self.exec.supports_decode_step):
+                # pure-decode fast path: slot-major compact batch, one
+                # dispatch through model.decode (two Pallas launches per
+                # layer when the fused prologue is enabled). Token-
+                # identical to the ragged pack — single-row decode
+                # through the unified step already matches legacy
+                # model.decode bitwise (golden-tested), and this IS the
+                # legacy decode call shape.
+                tok, dpos, table = self.sched.pack_decode(plan)
+                logits = self.exec.decode_step(tok, dpos, table)
+                dev_s = time.perf_counter() - td
+                rows = [slot for slot, _, _ in plan.decode]
+                toks = np.argmax(logits[rows, -1], axis=-1)
+            else:
+                packed = self.sched.pack(plan,
+                                         kernel_desc=self.paged_kernel)
+                if plan.cow:
+                    # COW page copies dispatch BEFORE the step so shared
+                    # content is duplicated before any divergent row
+                    # lands
+                    self.exec.copy_pages(plan.cow)
+                logits = self.exec.step(packed)
+                dev_s = time.perf_counter() - td
+                toks = np.argmax(logits[:packed["n_logits"], -1],
+                                 axis=-1)
             gen_before = self.sched.gen_tokens
             retired = self.sched.observe(plan, toks, time.perf_counter())
             # actual appended count (speculative steps emit 1..k+1 per
@@ -687,6 +710,11 @@ class ServeEngine:
             "n_dispatch": self.exec.n_dispatch,
             "dispatch_per_step": (self.exec.n_dispatch
                                   / max(1, self.step_count)),
+            # host-side dispatches amortized over emitted tokens — the
+            # serving-level view of the two-launch decode work (device
+            # kernel launches per dispatch are the roofline's column)
+            "launches_per_token": (self.exec.n_dispatch
+                                   / max(1, m["generated_tokens"])),
             "kv_capacity_bytes": sum(v.nbytes for v in self._cache.values()),
             "resident_kv_bytes_mean": (float(np.mean(
                 m["resident_kv_bytes"])) if m["resident_kv_bytes"] else 0),
@@ -707,6 +735,7 @@ class ServeEngine:
                 "packed_tokens_max": self.sched.packed_tokens_max}
                if self.schedule == "unified" else {}),
             **({"speculative_k": self.spec_k,
+                "adaptive_spec": self.sched.adaptive_spec,
                 "spec_cycles": self.sched.spec_cycles,
                 "spec_drafted_tokens": self.sched.spec_drafted,
                 "spec_accepted_tokens": self.sched.spec_accepted,

@@ -104,6 +104,24 @@ def _unified_step(step_fn, paged_kernel, params, cache, tokens, pos,
     return logits, cache
 
 
+# Pure-decode fast path: when a unified plan is decode-only (every packed
+# row has q_len 1 — no prefill chunks, no speculative verify items, no COW
+# copies), the ragged machinery buys nothing: the step IS a batched decode.
+# Dispatching it as ``model.decode`` instead lets the layer body take the
+# two-launch fused path (``models.dense._fused_decode_attn``: QKV-prologue
+# kernel + paged attention, no XLA glue between them) on TPU, and is
+# bitwise identical to the ragged step's decode rows everywhere (same
+# per-row numerics — the property the unified/legacy golden fixtures pin).
+# ``decode_fn`` is static; the cache (the global paged pools) is donated.
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def _fused_decode_step(decode_fn, params, cache, tokens, pos, table):
+    cache = dict(cache, pos=pos, page_table=table)
+    logits, cache = decode_fn(params, tokens, cache)
+    cache.pop("pos")
+    cache.pop("page_table")
+    return logits, cache
+
+
 # Speculative draft pass: ONE jitted dispatch runs n_steps greedy decode
 # steps of the draft model over its paged pool — lax.scan with on-device
 # argmax between steps, so proposing k tokens costs one host round trip
@@ -395,6 +413,12 @@ class RaggedExecutor(_CopyPagesMixin):
             self.draft_model, self.draft_params, self.draft_cache = draft
         else:
             self.draft_model = self.draft_params = self.draft_cache = None
+        # pure-decode fast path (see _fused_decode_step): one stable
+        # callable per executor so the jit cache keys on it once
+        self._decode_fn = None
+        if mesh is None and paged_kernel and model.decode is not None:
+            self._decode_fn = (
+                lambda p, t, c: model.decode(p, t, c, paged_kernel=True))
         if mesh is not None:
             self._init_mesh(mesh, tp_axis, tp_mode, tp_kernels)
 
@@ -476,6 +500,25 @@ class RaggedExecutor(_CopyPagesMixin):
         cache.pop("pos")
         cache.pop("page_table")
         self.cache = cache
+        return np.asarray(jax.block_until_ready(logits))
+
+    @property
+    def supports_decode_step(self) -> bool:
+        """True when decode-only plans may dispatch via ``decode_step``."""
+        return self._decode_fn is not None
+
+    def decode_step(self, tokens: np.ndarray, pos: np.ndarray,
+                    table: np.ndarray) -> np.ndarray:
+        """One batched decode over the compact (n_slots, 1) layout — the
+        pure-decode fast path (see ``_fused_decode_step``). Non-decoding
+        slots carry a dummy token at position 0 against the null table
+        row (inert writes, discarded logits). Returns logits
+        (n_slots, 1, V) as numpy; blocks so timed spans measure
+        execution, not enqueue."""
+        self.n_dispatch += 1
+        logits, self.cache = _fused_decode_step(
+            self._decode_fn, self.params, self.cache,
+            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(table))
         return np.asarray(jax.block_until_ready(logits))
 
     # ---------------------------------------------------- speculative draft

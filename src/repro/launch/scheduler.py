@@ -109,14 +109,22 @@ class StepPlan:
     spec: list = dataclasses.field(default_factory=list)
     spec_width: int = 1
     spec_drafts: dict = dataclasses.field(default_factory=dict)
+    # slot -> this step's draft count k' (adaptive speculation may plan
+    # fewer than the configured spec_k per slot; absent -> spec_width-1)
+    spec_k_of: dict = dataclasses.field(default_factory=dict)
     prefill: list = dataclasses.field(default_factory=list)
     draft_prefill: list = dataclasses.field(default_factory=list)
     admitted: list = dataclasses.field(default_factory=list)
     cow: list = dataclasses.field(default_factory=list)
 
+    def spec_rows(self, slot: int) -> int:
+        """Verify rows slot's item packs this step (its k' + 1)."""
+        return self.spec_k_of.get(slot, self.spec_width - 1) + 1
+
     @property
     def n_tokens(self) -> int:
-        return (len(self.decode) + len(self.spec) * self.spec_width
+        return (len(self.decode)
+                + sum(self.spec_rows(s) for s, _, _ in self.spec)
                 + sum(n for _, _, n, _ in self.prefill))
 
     @property
@@ -147,7 +155,11 @@ class TokenBudgetScheduler:
     def __init__(self, n_slots: int, max_batch_tokens: int, *, pool,
                  tables, prefill_chunk: int = 0,
                  eos_id: Optional[int] = None, plan_log_cap: int = 4096,
-                 prefix=None, spec_k: int = 0, draft_tables=None):
+                 prefix=None, spec_k: int = 0, draft_tables=None,
+                 adaptive_spec: bool = False):
+        if adaptive_spec and not spec_k:
+            raise ValueError("adaptive_spec needs spec_k > 0 (there is "
+                             "no draft count to adapt)")
         if max_batch_tokens < n_slots * (spec_k + 1):
             raise ValueError(
                 f"max_batch_tokens={max_batch_tokens} must be >= "
@@ -167,6 +179,16 @@ class TokenBudgetScheduler:
         # released in lockstep with the target tables)
         self.spec_k = spec_k
         self.draft_tables = draft_tables
+        # adaptive speculation: shrink a slot's per-step draft count k'
+        # toward what its running acceptance rate earns (k' = ceil(rate ·
+        # spec_k), floored at 1 so acceptance evidence keeps flowing) —
+        # a slot whose drafts keep missing stops paying k wasted verify
+        # rows per cycle. spec_k stays the hard cap; buffers, page
+        # reservations, and the draft scan are sized for it, so adapting
+        # never moves the worst case. EMA per SLOT, cleared on retire
+        # (slot reuse must not inherit the last occupant's rate).
+        self.adaptive_spec = adaptive_spec
+        self._accept_ema: dict = {}     # slot -> acceptance-rate EMA
         self.spec_drafted = 0       # drafted tokens offered to verify
         self.spec_accepted = 0      # drafted tokens the target agreed on
         self.spec_cycles = 0        # draft/verify cycles run
@@ -203,9 +225,22 @@ class TokenBudgetScheduler:
         self._admit_order = 0
         self.free = list(range(self.n_slots))
         self.spec_drafted = self.spec_accepted = self.spec_cycles = 0
+        self._accept_ema.clear()
         self.gen_tokens = 0
 
     # ------------------------------------------------------------ planning
+
+    def _slot_k(self, slot: int) -> int:
+        """This step's draft count for a slot: the configured ``spec_k``,
+        or — with ``adaptive_spec`` — what the slot's acceptance-rate EMA
+        earns, clamped to [1, spec_k] (see ``__init__``)."""
+        if not self.adaptive_spec:
+            return self.spec_k
+        rate = self._accept_ema.get(slot)
+        if rate is None:
+            return self.spec_k          # no evidence yet: be optimistic
+        return max(1, min(self.spec_k,
+                          int(np.ceil(rate * self.spec_k))))
 
     def _chunk(self, want: int, budget: int) -> int:
         # Budget-remainder audit (the "sliced chunk rounds to 0" worry):
@@ -238,10 +273,15 @@ class TokenBudgetScheduler:
                 continue
             pos = seq.prompt_len + len(seq.generated) - 1
             if self.spec_k:
-                self.tables.ensure(slot, pos + self.spec_k)
+                kx = self._slot_k(slot)
+                # target pages cover the k' verify rows this step packs;
+                # the DRAFT scan always runs spec_k + 1 fixed-length
+                # steps (one compile), so its pages cover the full cap
+                self.tables.ensure(slot, pos + kx)
                 self.draft_tables.ensure(slot, pos + self.spec_k)
                 plan.spec.append((slot, seq.generated[-1], pos))
-                budget -= self.spec_k + 1
+                plan.spec_k_of[slot] = kx
+                budget -= kx + 1
             else:
                 self.tables.ensure(slot, pos)
                 plan.decode.append((slot, seq.generated[-1], pos))
@@ -407,17 +447,18 @@ class TokenBudgetScheduler:
             items.append((slot, i, 1, p))
             last_row[slot] = i
             i += 1
-        K1 = plan.spec_width
         spec_start = {}                 # slot -> its verify item's first row
         for slot, tok, p in plan.spec:
-            # verify item: [last token, k drafts] at positions p..p+k
+            # verify item: [last token, k' drafts] at positions p..p+k'
+            # (k' <= spec_k when adaptive speculation trimmed the slot)
+            w = plan.spec_rows(slot)
             tokens[i] = tok
-            tokens[i + 1:i + K1] = plan.spec_drafts[slot]
-            pos[i:i + K1] = p + np.arange(K1)
-            slot_of[i:i + K1] = slot
-            items.append((slot, i, K1, p + K1 - 1))
+            tokens[i + 1:i + w] = plan.spec_drafts[slot][:w - 1]
+            pos[i:i + w] = p + np.arange(w)
+            slot_of[i:i + w] = slot
+            items.append((slot, i, w, p + w - 1))
             spec_start[slot] = i
-            i += K1
+            i += w
         for slot, off, n, toks in plan.prefill:
             tokens[i:i + n] = toks
             pos[i:i + n] = off + np.arange(n)
@@ -428,14 +469,15 @@ class TokenBudgetScheduler:
         # logit rows derive from the SAME consumer list observe() zips
         # over — single-sourced so the row/consumer alignment cannot
         # drift (each consumer reads its slot's last packed row; a spec
-        # consumer reads all k+1 of its item's rows)
+        # consumer reads all k'+1 of its item's rows)
         consumers = plan.logit_consumers
         logit_rows = buf["logit_rows"]
         j = 0
         for kind, slot in consumers:
             if kind == "spec":
-                logit_rows[j:j + K1] = spec_start[slot] + np.arange(K1)
-                j += K1
+                w = plan.spec_rows(slot)
+                logit_rows[j:j + w] = spec_start[slot] + np.arange(w)
+                j += w
             else:
                 logit_rows[j] = last_row[slot]
                 j += 1
@@ -547,6 +589,23 @@ class TokenBudgetScheduler:
             table[slot] = self.draft_tables.table[slot]
         return tok0, pos0, table
 
+    def pack_decode(self, plan: StepPlan):
+        """Compact slot-major inputs for the pure-decode fast path:
+        (tokens (n_slots, 1), pos (n_slots,), table (n_slots, n_ptab)).
+        One row per SLOT (not per token) — the fused decode step runs at
+        batch = n_slots, a single fixed compile shape. Non-decoding
+        slots feed a dummy token at position 0 against the NULL table
+        row so their cache writes land on the null page. Only valid for
+        plans that are pure decode (no prefill/spec/cow work)."""
+        tok = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        table = np.zeros_like(self.tables.table)
+        for slot, t, p in plan.decode:
+            tok[slot, 0] = t
+            pos[slot] = p
+            table[slot] = self.tables.table[slot]
+        return tok, pos, table
+
     # ---------------------------------------------------------- observation
 
     def _finished(self, seq: SeqState) -> bool:
@@ -562,6 +621,7 @@ class TokenBudgetScheduler:
     def _retire_slot(self, seq: SeqState, retired: list) -> None:
         retired.append(seq)
         del self.active[seq.slot]
+        self._accept_ema.pop(seq.slot, None)
         self.tables.release(seq.slot)
         if self.draft_tables is not None:
             self.draft_tables.release(seq.slot)
@@ -578,11 +638,12 @@ class TokenBudgetScheduler:
         token-identity argument. Afterwards both pools shrink back to the
         true sequence length so page tables and refcounts equal a
         never-drafted run's."""
-        k = self.spec_k
         slot = seq.slot
-        drafts = plan.spec_drafts[slot]
+        k = plan.spec_k_of.get(slot, self.spec_k)
+        drafts = plan.spec_drafts[slot][:k]
         self.spec_cycles += 1
         self.spec_drafted += k
+        n_acc = 0
         done = False
         for j in range(k):
             tok = int(ys[j])
@@ -591,6 +652,7 @@ class TokenBudgetScheduler:
             accepted = tok == int(drafts[j])
             if accepted:
                 self.spec_accepted += 1
+                n_acc += 1
             done = self._finished(seq)
             if done or not accepted:
                 break
@@ -599,6 +661,13 @@ class TokenBudgetScheduler:
             seq.generated.append(int(ys[k]))
             self.gen_tokens += 1
             done = self._finished(seq)
+        if self.adaptive_spec:
+            # per-slot acceptance EMA drives the next cycle's k' (see
+            # _slot_k). Fraction of THIS cycle's offered drafts accepted.
+            frac = n_acc / k
+            old = self._accept_ema.get(slot)
+            self._accept_ema[slot] = (frac if old is None
+                                      else 0.5 * old + 0.5 * frac)
         if done:
             self._retire_slot(seq, retired)
         else:
@@ -608,17 +677,17 @@ class TokenBudgetScheduler:
 
     def observe(self, plan: StepPlan, toks: np.ndarray, now: float) -> list:
         """Apply one step's argmax tokens (aligned with
-        ``plan.logit_consumers``; a "spec" consumer takes ``spec_width``
-        rows); returns the retired ``SeqState``s (slot freed, pages
+        ``plan.logit_consumers``; a "spec" consumer takes its
+        ``spec_rows(slot)`` rows); returns the retired ``SeqState``s (slot freed, pages
         released — the engine turns them into results)."""
         retired = []
         i = 0
         for kind, slot in plan.logit_consumers:
             seq = self.active[slot]
             if kind == "spec":
-                self._observe_spec(plan, seq,
-                                   toks[i:i + plan.spec_width], retired)
-                i += plan.spec_width
+                w = plan.spec_rows(slot)
+                self._observe_spec(plan, seq, toks[i:i + w], retired)
+                i += w
                 continue
             seq.generated.append(int(toks[i]))
             self.gen_tokens += 1

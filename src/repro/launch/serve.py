@@ -155,7 +155,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     prefill_chunk: int = 0, max_len: int = 0,
                     schedule: str = "legacy", max_batch_tokens: int = 0,
                     warmup: int = 0, prefix_cache: bool = False,
-                    shared_prefix: int = 0, speculative: int = 0):
+                    shared_prefix: int = 0, speculative: int = 0,
+                    adaptive_spec: bool = False):
     """Quantize then serve a workload through the engine.
 
     Default (``mixed=False``): ``batch`` uniform-length requests so
@@ -180,7 +181,9 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     something to hit. ``speculative=k`` (unified only) drafts k tokens
     per slot per cycle with the int4-packed quantization of the same
     checkpoint and verifies them in one ragged target step — output
-    stays token-identical to ``speculative=0``."""
+    stays token-identical to ``speculative=0``. ``adaptive_spec=True``
+    lowers each slot's per-cycle draft depth toward its running
+    acceptance rate (k stays the hard cap; output unchanged)."""
     cfg, model, params, mem = build_served_model(
         arch, transform, w_bits, a_bits, kv_bits, smoke, seed,
         cfg_overrides=cfg_overrides)
@@ -205,7 +208,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                          prefill_chunk=prefill_chunk, schedule=schedule,
                          max_batch_tokens=max_batch_tokens,
                          prefix_cache=prefix_cache,
-                         speculative_k=speculative, draft=draft)
+                         speculative_k=speculative, draft=draft,
+                         adaptive_spec=adaptive_spec)
     if warmup:
         results, summary = run_steady(engine, requests, passes=int(warmup))
     else:
@@ -283,6 +287,9 @@ def validate_flags(ap: argparse.ArgumentParser, args) -> None:
                  f"(--speculative + 1) (got {args.max_batch_tokens}, "
                  f"need {args.batch * (args.speculative + 1)}; every "
                  f"decoding slot packs k+1 verify rows per step)")
+    if args.adaptive_spec and not args.speculative:
+        ap.error("--adaptive-spec needs --speculative K (it tunes the "
+                 "per-slot draft depth below K)")
 
 
 def main() -> None:
@@ -341,6 +348,10 @@ def main() -> None:
                          "and verify all K+1 positions in one ragged "
                          "target step (greedy acceptance — output stays "
                          "token-identical; needs --schedule unified)")
+    ap.add_argument("--adaptive-spec", action="store_true",
+                    help="lower each slot's per-cycle draft depth toward "
+                         "its running acceptance rate (K stays the hard "
+                         "cap; needs --speculative)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
     validate_flags(ap, args)
@@ -356,7 +367,8 @@ def main() -> None:
                           max_batch_tokens=args.max_batch_tokens,
                           prefix_cache=args.prefix_cache,
                           shared_prefix=args.shared_prefix,
-                          speculative=args.speculative)
+                          speculative=args.speculative,
+                          adaptive_spec=args.adaptive_spec)
     eng = out["engine"]
     mesh_note = (f", mesh={eng['mesh']}" if eng.get("mesh") else "")
     sched_note = ""
@@ -365,7 +377,8 @@ def main() -> None:
                       f"itl p95 {eng['itl_p95_s'] * 1e3:.0f}ms]")
     spec_note = ""
     if eng.get("speculative_k"):
-        spec_note = (f", spec[k={eng['speculative_k']}, "
+        adapt = ", adaptive" if eng.get("adaptive_spec") else ""
+        spec_note = (f", spec[k={eng['speculative_k']}{adapt}, "
                      f"{eng['spec_acceptance_rate']:.0%} accepted, "
                      f"{eng['spec_drafted_tokens']}t drafted]")
     prefix_note = ""

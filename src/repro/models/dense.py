@@ -89,6 +89,71 @@ def init(cfg, rng) -> dict:
 
 # ----------------------------------------------------------------- forward
 
+def _fused_decode_operands(cfg, lp, cache_sl, s, b, tp_axis, ragged_desc,
+                           page_table, paged_kernel):
+    """Two-launch decode gate: returns (wqkv QLinear, (blocks, ha, hb,
+    sign)) when this layer's attention block can run the one-launch QKV
+    prologue (``kernels/decode_layer.py``) + paged attention, else None.
+
+    The prologue covers exactly the composed quantized decode shape:
+    single-token rows (s == 1, B <= 8), quantized paged pools, serving
+    params with a concatenated QKV QLinear whose transform the fused
+    kernels can decompose, and none of the attention features the paged
+    kernel already excludes (windows, softcap, qk-norm). Mixed-q_len
+    (ragged) and tensor-parallel steps keep the current path. Routing is
+    decided by ``ops.use_fused_decode()`` (backend/env), so off-TPU
+    golden fixtures keep the composed path's exact numerics by default.
+    """
+    if not (paged_kernel and s == 1 and ragged_desc is None
+            and tp_axis is None and page_table is not None
+            and cache_sl is not None and "k_scale" in cache_sl
+            and bool(cfg.kv_quant_bits) and b <= 8
+            and not cfg.window and not cfg.attn_softcap
+            and not cfg.qk_norm):
+        return None
+    p = lp.get("wqkv")
+    if not isinstance(p, qlinear.QLinear) or not p.act_bits:
+        return None
+    from repro.kernels import ops
+    if not ops.use_fused_decode():
+        return None
+    dec = ops.fused_transform_operands(p.transform)
+    if dec is None:
+        return None
+    return p, dec
+
+
+def _fused_decode_attn(cfg, fd, h, cache_sl, page_table, pos, b):
+    """The two-launch decode attention block: ONE prologue launch (CAT ->
+    quant -> W4A8 QKV GEMV -> RoPE -> int8 KV quant -> paged scatter)
+    feeding ONE paged-attention launch. Returns (o (B, 1, Hq·hd),
+    new_cache_sl)."""
+    from repro.kernels import ops
+    from repro.models.layers import _paged_indices
+
+    p, (blocks, ha, hb, sign) = fd
+    cd = h.dtype
+    page_size = cache_sl["k"].shape[1]
+    pos_vec = (pos if getattr(pos, "ndim", 0)
+               else jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,)))
+    pids, rows = _paged_indices(page_table, pos_vec, b, 1, page_size)
+    q, ck, cks, cv, cvs = ops.decode_qkv_prologue(
+        h.reshape(b, -1), blocks, ha, hb, sign, p.qweight, p.scale,
+        cache_sl["k"], cache_sl["k_scale"], cache_sl["v"],
+        cache_sl["v_scale"], pids, rows, pos_vec,
+        n_q=cfg.q_dim, head_dim=cfg.head_dim,
+        rope_theta=float(cfg.rope_theta), kv_bits=cfg.kv_quant_bits,
+        act_bits=p.act_bits, packed=p.packed)
+    new_cache_sl = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
+    kvh = ck.shape[2]
+    g = cfg.q_dim // cfg.head_dim // kvh
+    qk = q.astype(cd).reshape(b, kvh, g, cfg.head_dim)
+    lengths = pos_vec + 1
+    o = ops.paged_attention(qk, ck, cks, cv, cvs, page_table,
+                            lengths.astype(jnp.int32))
+    return o.reshape(b, 1, -1).astype(cd), new_cache_sl
+
+
 def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
                 taps=None, layer_idx=None, tp_axis=None,
                 tp_mode: str = "gather", tp_kernels=False,
@@ -131,106 +196,125 @@ def _layer_body(cfg, x, lp, cache_sl, is_global, pos, positions,
 
     h = rms_norm(x, lp["ln1"])
     _tap(taps, layer_idx, "attn_in", h)
-    if "wqkv" in lp:
-        # fused serving params (make_serving_params): one concatenated
-        # QKV projection — one transform+quant+matmul chain instead of
-        # three. Column slices of a matmul are exact, so splitting the
-        # output reproduces the separate projections bitwise.
-        qkv = qlinear.dense(lp["wqkv"], h)
-        hq, hkv = cfg.q_dim, cfg.kv_dim
-        q = qkv[..., :hq]
-        k = qkv[..., hq:hq + hkv]
-        v = qkv[..., hq + hkv:]
-        q = q.reshape(b, s, -1, cfg.head_dim)
-        k = k.reshape(b, s, -1, cfg.head_dim)
-        v = v.reshape(b, s, -1, cfg.head_dim)
+    fd = _fused_decode_operands(cfg, lp, cache_sl, s, b, tp_axis,
+                                ragged_desc, page_table, paged_kernel)
+    if fd is not None:
+        # two-launch decode: the QKV prologue kernel replaces the dense
+        # projection + rope + KV-quant + scatter chain below. Numerics
+        # follow the integer-accumulation route (``qlinear.dense_fused``
+        # route 3 == the TPU kernel route), NOT the portable bf16
+        # ``w_eff`` route the composed path takes off-TPU — the same
+        # documented route-2/route-3 gap; gating defaults off outside
+        # TPU (REPRO_DECODE_FUSED overrides) so stock CPU runs keep the
+        # composed path bitwise.
+        o, new_cache_sl = _fused_decode_attn(cfg, fd, h, cache_sl,
+                                             page_table, pos, b)
     else:
-        q = qlinear.dense(lp["wq"], h).reshape(b, s, -1, cfg.head_dim)
-        k = qlinear.dense(lp["wk"], h).reshape(b, s, -1, cfg.head_dim)
-        v = qlinear.dense(lp["wv"], h).reshape(b, s, -1, cfg.head_dim)
-    if cfg.qk_norm:
-        q = rms_norm(q, lp["q_norm"])
-        k = rms_norm(k, lp["k_norm"])
-    q = rope(q, positions, cfg.rope_theta)
-    k = rope(k, positions, cfg.rope_theta)
-
-    window = None
-    if cfg.window:
-        window = jnp.where(is_global, jnp.int32(2**30), jnp.int32(cfg.window))
-
-    quant_cache = bool(cfg.kv_quant_bits) and cache_sl is not None \
-        and "k_scale" in cache_sl
-    if cfg.kv_quant_bits and not quant_cache:
-        # no cache (training fwd): simulate KV quantization numerics
-        from repro.core.quantizers import QuantSpec, fake_quant
-        kv_spec = QuantSpec(bits=cfg.kv_quant_bits, symmetric=False,
-                            per="token", dynamic=True)
-        k = fake_quant(k, kv_spec)
-        v = fake_quant(v, kv_spec)
-
-    new_cache_sl = None
-    o = None
-    if cache_sl is not None and page_table is not None:
-        from repro.models.layers import (gather_pages, paged_cache_update,
-                                         paged_cache_update_quantized)
-        if quant_cache:
-            ck, cks, cv, cvs = paged_cache_update_quantized(
-                cache_sl["k"], cache_sl["k_scale"], cache_sl["v"],
-                cache_sl["v_scale"], k, v, page_table, pos,
-                cfg.kv_quant_bits)
-            new_cache_sl = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
-            use_kernel = (paged_kernel and s == 1 and window is None
-                          and not cfg.attn_softcap)
-            if use_kernel and ragged_desc is not None:
-                # unified ragged step: regroup the flat packed rows into
-                # per-work-item query blocks so every sequence's pages
-                # stream ONCE for all its prefill-chunk + decode queries
-                # (one kernel launch covers the whole mixed batch)
-                from repro.kernels import ops
-                kvh = ck.shape[2]
-                qf = q.reshape(b, kvh, q.shape[2] // kvh, cfg.head_dim)
-                qb = qf[ragged_desc["qidx"]]     # (R, Q, KVH, g, hd)
-                ob = ops.ragged_paged_attention(
-                    qb, ck, cks, cv, cvs, ragged_desc["table"],
-                    ragged_desc["lengths"].astype(jnp.int32),
-                    ragged_desc["qpos"].astype(jnp.int32))
-                o = ob[ragged_desc["inv_seq"], ragged_desc["inv_qi"]]
-                o = o.reshape(b, 1, -1)
-            elif use_kernel:
-                # decode fast path: stream int8 pages, dequant in VMEM
-                # (rtol-level vs the gathered logical view, not bitwise)
-                from repro.kernels import ops
-                kvh = ck.shape[2]
-                qk = q.reshape(b, kvh, q.shape[2] // kvh, cfg.head_dim)
-                lengths = (pos if getattr(pos, "ndim", 0)
-                           else jnp.broadcast_to(pos, (b,))) + 1
-                o = ops.paged_attention(qk, ck, cks, cv, cvs, page_table,
-                                        lengths.astype(jnp.int32))
-                o = o.reshape(b, 1, -1)
-            else:
-                k_att = (gather_pages(ck, page_table),
-                         gather_pages(cks, page_table))
-                v_att = (gather_pages(cv, page_table),
-                         gather_pages(cvs, page_table))
+        if "wqkv" in lp:
+            # fused serving params (make_serving_params): one concatenated
+            # QKV projection — one transform+quant+matmul chain instead of
+            # three. Column slices of a matmul are exact, so splitting the
+            # output reproduces the separate projections bitwise.
+            qkv = qlinear.dense(lp["wqkv"], h)
+            hq, hkv = cfg.q_dim, cfg.kv_dim
+            q = qkv[..., :hq]
+            k = qkv[..., hq:hq + hkv]
+            v = qkv[..., hq + hkv:]
+            q = q.reshape(b, s, -1, cfg.head_dim)
+            k = k.reshape(b, s, -1, cfg.head_dim)
+            v = v.reshape(b, s, -1, cfg.head_dim)
         else:
-            ck, cv = paged_cache_update(cache_sl["k"], cache_sl["v"], k, v,
-                                        page_table, pos)
+            q = qlinear.dense(lp["wq"], h).reshape(b, s, -1, cfg.head_dim)
+            k = qlinear.dense(lp["wk"], h).reshape(b, s, -1, cfg.head_dim)
+            v = qlinear.dense(lp["wv"], h).reshape(b, s, -1, cfg.head_dim)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k = rms_norm(k, lp["k_norm"])
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+        window = None
+        if cfg.window:
+            window = jnp.where(is_global, jnp.int32(2**30),
+                               jnp.int32(cfg.window))
+
+        quant_cache = bool(cfg.kv_quant_bits) and cache_sl is not None \
+            and "k_scale" in cache_sl
+        if cfg.kv_quant_bits and not quant_cache:
+            # no cache (training fwd): simulate KV quantization numerics
+            from repro.core.quantizers import QuantSpec, fake_quant
+            kv_spec = QuantSpec(bits=cfg.kv_quant_bits, symmetric=False,
+                                per="token", dynamic=True)
+            k = fake_quant(k, kv_spec)
+            v = fake_quant(v, kv_spec)
+
+        new_cache_sl = None
+        o = None
+        if cache_sl is not None and page_table is not None:
+            from repro.models.layers import (gather_pages,
+                                             paged_cache_update,
+                                             paged_cache_update_quantized)
+            if quant_cache:
+                ck, cks, cv, cvs = paged_cache_update_quantized(
+                    cache_sl["k"], cache_sl["k_scale"], cache_sl["v"],
+                    cache_sl["v_scale"], k, v, page_table, pos,
+                    cfg.kv_quant_bits)
+                new_cache_sl = {"k": ck, "k_scale": cks, "v": cv,
+                                "v_scale": cvs}
+                use_kernel = (paged_kernel and s == 1 and window is None
+                              and not cfg.attn_softcap)
+                if use_kernel and ragged_desc is not None:
+                    # unified ragged step: regroup the flat packed rows
+                    # into per-work-item query blocks so every sequence's
+                    # pages stream ONCE for all its prefill-chunk +
+                    # decode queries (one launch for the mixed batch)
+                    from repro.kernels import ops
+                    kvh = ck.shape[2]
+                    qf = q.reshape(b, kvh, q.shape[2] // kvh, cfg.head_dim)
+                    qb = qf[ragged_desc["qidx"]]     # (R, Q, KVH, g, hd)
+                    ob = ops.ragged_paged_attention(
+                        qb, ck, cks, cv, cvs, ragged_desc["table"],
+                        ragged_desc["lengths"].astype(jnp.int32),
+                        ragged_desc["qpos"].astype(jnp.int32))
+                    o = ob[ragged_desc["inv_seq"], ragged_desc["inv_qi"]]
+                    o = o.reshape(b, 1, -1)
+                elif use_kernel:
+                    # decode fast path: stream int8 pages, dequant in
+                    # VMEM (rtol-level vs the gathered view, not bitwise)
+                    from repro.kernels import ops
+                    kvh = ck.shape[2]
+                    qk = q.reshape(b, kvh, q.shape[2] // kvh, cfg.head_dim)
+                    lengths = (pos if getattr(pos, "ndim", 0)
+                               else jnp.broadcast_to(pos, (b,))) + 1
+                    o = ops.paged_attention(qk, ck, cks, cv, cvs,
+                                            page_table,
+                                            lengths.astype(jnp.int32))
+                    o = o.reshape(b, 1, -1)
+                else:
+                    k_att = (gather_pages(ck, page_table),
+                             gather_pages(cks, page_table))
+                    v_att = (gather_pages(cv, page_table),
+                             gather_pages(cvs, page_table))
+            else:
+                ck, cv = paged_cache_update(cache_sl["k"], cache_sl["v"],
+                                            k, v, page_table, pos)
+                new_cache_sl = {"k": ck, "v": cv}
+                k_att = gather_pages(ck, page_table).astype(cd)
+                v_att = gather_pages(cv, page_table).astype(cd)
+        elif cache_sl is not None and quant_cache:
+            from repro.models.layers import cache_update_quantized
+            ck, cks, cv, cvs = cache_update_quantized(
+                cache_sl["k"], cache_sl["k_scale"], cache_sl["v"],
+                cache_sl["v_scale"], k, v, pos, cfg.kv_quant_bits)
+            new_cache_sl = {"k": ck, "k_scale": cks, "v": cv,
+                            "v_scale": cvs}
+            k_att, v_att = (ck, cks), (cv, cvs)
+        elif cache_sl is not None:
+            ck, cv = cache_update(cache_sl["k"], cache_sl["v"], k, v, pos)
             new_cache_sl = {"k": ck, "v": cv}
-            k_att = gather_pages(ck, page_table).astype(cd)
-            v_att = gather_pages(cv, page_table).astype(cd)
-    elif cache_sl is not None and quant_cache:
-        from repro.models.layers import cache_update_quantized
-        ck, cks, cv, cvs = cache_update_quantized(
-            cache_sl["k"], cache_sl["k_scale"], cache_sl["v"],
-            cache_sl["v_scale"], k, v, pos, cfg.kv_quant_bits)
-        new_cache_sl = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
-        k_att, v_att = (ck, cks), (cv, cvs)
-    elif cache_sl is not None:
-        ck, cv = cache_update(cache_sl["k"], cache_sl["v"], k, v, pos)
-        new_cache_sl = {"k": ck, "v": cv}
-        k_att, v_att = ck.astype(cd), cv.astype(cd)
-    else:
-        k_att, v_att = k, v
+            k_att, v_att = ck.astype(cd), cv.astype(cd)
+        else:
+            k_att, v_att = k, v
 
     if o is None:
         o = chunked_attention(q, k_att, v_att, q_positions=positions,

@@ -387,6 +387,141 @@ def test_pack_reuses_descriptor_buffers():
             np.testing.assert_array_equal(v, snap[k])
 
 
+# ------------------------------------------- adaptive speculative depth
+
+def _make_spec_sched(n_slots, max_batch_tokens, max_len, spec_k,
+                     adaptive=False, page_size=4):
+    kv_len = -(-(max_len + spec_k + 1) // page_size) * page_size
+    n_ptab = kv_len // page_size
+    pool = PagePool(1 + n_slots * n_ptab, page_size)
+    tables = SlotPageTables(pool, n_slots, n_ptab)
+    dpool = PagePool(1 + n_slots * n_ptab, page_size)
+    dtables = SlotPageTables(dpool, n_slots, n_ptab)
+    return TokenBudgetScheduler(n_slots, max_batch_tokens, pool=pool,
+                                tables=tables, spec_k=spec_k,
+                                draft_tables=dtables,
+                                adaptive_spec=adaptive)
+
+
+def _drive_spec(lengths, budgets, n_slots, max_batch_tokens, spec_k,
+                adaptive, accept_p, seed=0):
+    """Spec-mode plan/observe loop with a python draft+target executor.
+    Drafts are the stub rule's correct continuation with probability
+    ``accept_p`` per position (chain-fed: a wrong draft derails the
+    rest, like a real draft model). Returns (sched, reqs, done tokens,
+    every per-slot k' the planner chose)."""
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid, rng.integers(0, _V, p).astype(np.int32), g)
+            for rid, (p, g) in enumerate(zip(lengths, budgets))]
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 1
+    sched = _make_spec_sched(n_slots, max_batch_tokens, max_len, spec_k,
+                             adaptive=adaptive)
+    page_size = sched.tables.pool.page_size
+    for r in reqs:
+        sched.queue.append(r)
+    done, k_seen, guard = {}, [], 0
+    while not sched.idle:
+        guard += 1
+        assert guard < 10_000, "spec scheduler failed to drain"
+        plan = sched.plan(guard)
+        for slot, tok, p in plan.spec:
+            kx = plan.spec_k_of[slot]
+            k_seen.append(kx)
+            # ---- the budget/reservation math k' must never exceed
+            assert 1 <= kx <= spec_k
+            assert plan.spec_rows(slot) == kx + 1 <= spec_k + 1
+            # target pages cover the last verify position p+k', the
+            # draft pool the full worst case p+spec_k (the draft scan
+            # always runs spec_k steps regardless of k')
+            assert sched.tables.table[slot, (p + kx) // page_size] != 0
+            assert sched.draft_tables.table[
+                slot, (p + spec_k) // page_size] != 0
+            fed, drafts = tok, []
+            for j in range(spec_k):
+                c = _next_token(fed, p + j)
+                d = c if rng.random() < accept_p else (c + 1) % _V
+                drafts.append(d)
+                fed = d
+            plan.spec_drafts[slot] = np.asarray(drafts, np.int32)
+        assert plan.n_tokens <= max_batch_tokens
+        packed = sched.pack(plan)
+        toks = [_next_token(int(packed["tokens"][row, 0]),
+                            int(packed["pos"][row]))
+                for row in packed["logit_rows"][:packed["n_logits"]]]
+        for seq in sched.observe(plan, np.asarray(toks), now=0.0):
+            done[seq.req.rid] = list(seq.req.prompt) + seq.generated
+    assert sched.pool.in_use == 0
+    assert sched.draft_tables.pool.in_use == 0
+    return sched, reqs, done, k_seen
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    lens_budgets=st.lists(
+        st.tuples(st.integers(1, 12), st.integers(1, 8)),
+        min_size=1, max_size=6),
+    n_slots=st.integers(1, 3),
+    spec_k=st.integers(1, 4),
+    adaptive=st.booleans(),
+    accept_pct=st.integers(0, 100),
+)
+def test_property_adaptive_spec_invariants(lens_budgets, n_slots, spec_k,
+                                           adaptive, accept_pct):
+    """Adaptive draft depth never breaks the budget/reservation math
+    (asserted inside the drive) and never changes the output: every
+    appended token is still a target argmax, so trajectories match the
+    per-request simulation at ANY acceptance rate and either mode."""
+    lengths = [p for p, _ in lens_budgets]
+    budgets = [g for _, g in lens_budgets]
+    budget = n_slots * (spec_k + 1) + 2
+    _, reqs, done, k_seen = _drive_spec(lengths, budgets, n_slots, budget,
+                                        spec_k, adaptive,
+                                        accept_pct / 100.0)
+    for r in reqs:
+        want = _simulate(r.prompt, r.max_new_tokens, None)
+        assert done[r.rid] == want, (r.rid, done[r.rid], want)
+    if not adaptive:
+        assert all(k == spec_k for k in k_seen)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("adaptive", [False, True])
+def test_adaptive_spec_invariants_ports(seed, adaptive):
+    """Deterministic port of the property (runs without hypothesis)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 7))
+    lengths = rng.integers(1, 13, n).tolist()
+    budgets = rng.integers(1, 9, n).tolist()
+    n_slots = int(rng.integers(1, 4))
+    spec_k = int(rng.integers(1, 5))
+    accept_p = float(rng.random())
+    budget = n_slots * (spec_k + 1) + 2
+    _, reqs, done, k_seen = _drive_spec(lengths, budgets, n_slots, budget,
+                                        spec_k, adaptive, accept_p,
+                                        seed=seed)
+    for r in reqs:
+        want = _simulate(r.prompt, r.max_new_tokens, None)
+        assert done[r.rid] == want, (r.rid, done[r.rid], want)
+    if not adaptive:
+        assert all(k == spec_k for k in k_seen)
+
+
+def test_adaptive_spec_depth_tracks_acceptance():
+    """Direction check: all-rejected drafts drive a slot's k' down to 1
+    after its first cycle; all-accepted drafts keep k' at the cap. A
+    fresh occupant of a reused slot starts back at the cap (the EMA is
+    cleared on retire — no inherited pessimism)."""
+    spec_k = 4
+    _, _, _, k_low = _drive_spec([4, 4, 4], [8, 8, 8], 1, 2 * (spec_k + 1),
+                                 spec_k, True, accept_p=0.0)
+    # slot reuse: each request's FIRST cycle is optimistic (k' = cap),
+    # every later cycle has EMA 0 -> k' = 1
+    assert k_low.count(spec_k) == 3 and set(k_low) == {1, spec_k}
+    _, _, _, k_high = _drive_spec([4, 4], [8, 8], 2, 2 * (spec_k + 1),
+                                  spec_k, True, accept_p=1.0)
+    assert all(k == spec_k for k in k_high)
+
+
 def test_scheduler_reset_reuses_engine():
     """reset() returns a drained scheduler to its initial state: a second
     identical workload must produce identical plans and tokens."""

@@ -61,6 +61,20 @@ def test_speculative_matches_golden_bitwise(case, k):
             f"from the target-only golden fixture")
 
 
+def test_adaptive_spec_matches_golden_bitwise():
+    """adaptive_spec only changes how many drafts each slot packs per
+    cycle — acceptance still appends target-argmax rows only, so the
+    output must stay bitwise equal to the golden fixture."""
+    case = sorted(regenerate.CASES)[0]
+    got = regenerate.run_case(case, schedule="unified", page_size=8,
+                              max_batch_tokens=12, speculative_k=4,
+                              draft=_draft(), adaptive_spec=True)
+    golden = _golden(case)
+    for rid, want in golden.items():
+        assert got[rid] == want, (
+            f"{case} adaptive: tokens for rid={rid} diverged")
+
+
 @pytest.mark.parametrize("prefix_cache", [False, True],
                          ids=["prefix_off", "prefix_on"])
 def test_speculative_shared_prefix_identity(prefix_cache):

@@ -125,6 +125,41 @@ def test_unified_ragged_kernel_token_agreement(kw):
     assert agree >= 0.9, f"token agreement {agree:.2f} < 0.9"
 
 
+def test_pure_decode_fast_path_engages_and_agrees():
+    """Steps whose plan is pure decode (no prefill/spec/cow) must
+    dispatch through ``RaggedExecutor.decode_step`` — the compact
+    slot-major batch the fused decode layer wants — and the engine's
+    output stays pinned against the golden fixture like the ragged
+    kernel path (rtol-level kernels, so >= 0.9 agreement)."""
+    cfg, model, params = regenerate.build_case("int8_kv")
+    reqs = request_workload(cfg, regenerate.N_REQUESTS, gen=regenerate.GEN,
+                            lengths=regenerate.LENGTHS,
+                            seed=regenerate.SEED)
+    eng = ServeEngine(model, params, n_slots=regenerate.N_SLOTS,
+                      max_len=regenerate.MAX_LEN, schedule="unified",
+                      max_batch_tokens=8, paged_kernel=True, page_size=8)
+    assert eng.exec.supports_decode_step
+    calls = {"n": 0}
+    orig = eng.exec.decode_step
+
+    def counted(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    eng.exec.decode_step = counted
+    res = eng.run(reqs)
+    assert calls["n"] > 0, "pure-decode fast path never engaged"
+    golden = _golden("int8_kv")
+    agree = np.mean([
+        (np.asarray(res[r["rid"]].tokens)
+         == np.asarray(golden[str(r["rid"])])).mean() for r in reqs])
+    assert agree >= 0.9, f"token agreement {agree:.2f} < 0.9"
+    s = eng.summary()
+    assert s["launches_per_token"] > 0
+    # host dispatches can't exceed one per engine step on this path
+    assert s["dispatch_per_step"] <= 1.0 + 1e-9
+
+
 def test_unified_eos_and_single_token_budgets():
     """eos retirement and max_new=1 requests behave identically to
     legacy under a budget that forces multi-step prefill."""
