@@ -43,6 +43,15 @@ non-speculative unified baseline at k in {2, 4}, token-identity checked
 (greedy acceptance makes identity structural; a false here is a bug and
 exits nonzero).
 
+Pipelined row (``pipelined``, schema v4): the depth-1 asynchronous
+unified loop (device-resident sampling + one-step-ahead scheduling,
+``ServeEngine(pipeline=True)``) vs the synchronous loop on a
+decode-heavy workload — tok/s both ways, speedup, ITL p50/p95,
+``overlap_frac`` (fraction of host planning/pack/observe time hidden
+under device compute), ``host_ms_hidden``, mispredict count, and a
+token-identity check. Runs in ``--quick`` too, where ``overlap_frac``
+is gated against the recorded artifact like ``dispatch_per_step``.
+
 With >= 4 local devices (XLA_FLAGS=--xla_force_host_platform_device_count
 on CPU) it also serves the int4-packed variant tensor-parallel — a tp=1
 vs tp=4 pair on an MHA smoke config, token-identity checked row-to-row.
@@ -334,6 +343,53 @@ def _speculative_rows(rows, quick: bool = False) -> None:
     rows["speculative"] = row
 
 
+def _pipelined_rows(rows, quick: bool = False) -> None:
+    """Sync vs pipelined unified loop on a decode-heavy workload (short
+    prompts, long gens — decode cycles are where per-step host latency
+    dominates and the overlap pays). Same engine config both ways; the
+    only variable is ``pipeline``. Token identity is structural (the
+    pipelined loop replays the same per-row numerics one step ahead) and
+    the row records the check; the run fails loudly if it breaks."""
+    import numpy as np
+
+    n_requests, n_slots, prompt, gen = ((4, 2, 8, 16) if quick
+                                        else (8, 4, 8, 48))
+    common = dict(arch="catlm_60m", batch=n_requests, prompt_len=prompt,
+                  gen=gen, transform="cat", w_bits=4, a_bits=8, kv_bits=8,
+                  seed=0, n_slots=n_slots, paged=True, schedule="unified",
+                  warmup=1)
+    sync = serve_benchmark(**common, pipeline=False)
+    pipe = serve_benchmark(**common, pipeline=True)
+    es, ep = sync["engine"], pipe["engine"]
+    identical = bool(np.array_equal(sync["tokens"], pipe["tokens"]))
+    speedup = (pipe["tok_per_s"] / sync["tok_per_s"]
+               if sync["tok_per_s"] else 0.0)
+    rows["pipelined"] = {
+        "workload": (f"{n_requests} reqs, {prompt}t prompt, gen {gen}, "
+                     "cat w4a8 kv8, unified schedule (decode-heavy)"),
+        "sync_tok_per_s": sync["tok_per_s"],
+        "pipelined_tok_per_s": pipe["tok_per_s"],
+        "pipelined_speedup": speedup,
+        "sync_itl_p50_s": es["itl_p50_s"],
+        "sync_itl_p95_s": es["itl_p95_s"],
+        "pipelined_itl_p50_s": ep["itl_p50_s"],
+        "pipelined_itl_p95_s": ep["itl_p95_s"],
+        "overlap_frac": ep["overlap_frac"],
+        "host_ms_hidden": ep["host_ms_hidden"],
+        "mispredicts": ep["mispredicts"],
+        "dispatch_per_step": ep["dispatch_per_step"],
+        "launches_per_token": ep["launches_per_token"],
+        "token_identical": identical,
+        "n_requests": n_requests, "n_slots": n_slots,
+    }
+    emit("serve_pipelined", pipe["wall_s"] * 1e6,
+         f"tok_per_s={pipe['tok_per_s']:.1f} "
+         f"speedup={speedup:.2f}x "
+         f"overlap={ep['overlap_frac']:.2f} "
+         f"hidden_ms={ep['host_ms_hidden']:.2f} "
+         f"identical={identical}")
+
+
 # results/serve_bench.json layout: {"schema_version": N, "rows": {...}}.
 # Bump on any row-shape change so downstream readers can dispatch.
 # v3: variant rows are steady-state (untimed warmup pass) and carry
@@ -342,7 +398,10 @@ def _speculative_rows(rows, quick: bool = False) -> None:
 # additionally carry launches_per_token (host dispatches amortized over
 # emitted tokens — the serving-level launch-pressure column the
 # two-launch decode work moves).
-SCHEMA_VERSION = 3
+# v4: adds the ``pipelined`` row (sync vs depth-1 asynchronous unified
+# loop: tok/s + speedup, ITL percentiles, overlap_frac, host_ms_hidden,
+# mispredicts, token_identical), present in --quick artifacts too.
+SCHEMA_VERSION = 4
 
 
 def _dispatch_gate(rows: dict, out_path: str) -> list:
@@ -368,6 +427,28 @@ def _dispatch_gate(rows: dict, out_path: str) -> list:
         if ref and cur and cur > ref * 1.05:
             bad.append(f"{name}: {cur:.3f} > baseline {ref:.3f}")
     return bad
+
+
+def _overlap_gate(rows: dict, out_path: str) -> list:
+    """--quick regression gate (same pattern as ``_dispatch_gate``): the
+    pipelined row's ``overlap_frac`` dropping more than 5% below the
+    previously recorded quick artifact means host work stopped hiding
+    under device compute — the pipelining win regressing. Returns the
+    offending descriptions (empty = pass / no baseline)."""
+    try:
+        with open(out_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError):
+        return []
+    if (base.get("schema_version") != SCHEMA_VERSION
+            or not base.get("quick")):
+        return []
+    ref = base.get("rows", {}).get("pipelined", {}).get("overlap_frac")
+    cur = rows.get("pipelined", {}).get("overlap_frac")
+    if ref and cur is not None and cur < ref * 0.95:
+        return [f"pipelined: overlap_frac {cur:.3f} < baseline "
+                f"{ref:.3f} - 5%"]
+    return []
 
 
 def _hot_path_kib(w_bits: int, fused: bool) -> float:
@@ -430,11 +511,13 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
             emit(f"serve_{q}_vs_fp_steady", 0.0, f"ratio={r:.2f}")
     _prefix_rows(rows, n_slots, quick=quick)
     _speculative_rows(rows, quick=quick)
+    _pipelined_rows(rows, quick=quick)
     if not quick:
         _paged_rows(rows, n_requests, n_slots)
         _unified_rows(rows, n_slots)
         _tp_rows(rows, n_requests, n_slots, gen)
-    regressed = _dispatch_gate(rows, out_path) if quick else []
+    regressed = (_dispatch_gate(rows, out_path)
+                 + _overlap_gate(rows, out_path)) if quick else []
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump({"schema_version": SCHEMA_VERSION, "quick": quick,
@@ -448,8 +531,8 @@ def main(n_requests: int = 8, n_slots: int = 3, gen: int = 8,
     if bad:
         raise SystemExit(f"token identity violated in rows: {bad}")
     if regressed:
-        raise SystemExit("dispatch_per_step regressed vs the recorded "
-                         f"baseline: {regressed}")
+        raise SystemExit("regressed vs the recorded baseline: "
+                         f"{regressed}")
 
 
 if __name__ == "__main__":
@@ -458,11 +541,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: 2 requests, variant rows plus small "
-                         "prefix_shared and speculative rows (skips the "
-                         "paged/unified/tp sections); exits nonzero if "
-                         "any row reports token_identical=false or "
-                         "dispatch_per_step regresses >5% above the "
-                         "previously recorded --quick artifact")
+                         "prefix_shared, speculative and pipelined rows "
+                         "(skips the paged/unified/tp sections); exits "
+                         "nonzero if any row reports "
+                         "token_identical=false, dispatch_per_step "
+                         "regresses >5% above, or the pipelined row's "
+                         "overlap_frac drops >5% below the previously "
+                         "recorded --quick artifact")
     ap.add_argument("--out", default="results/serve_bench.json")
     a = ap.parse_args()
     if a.quick:

@@ -55,10 +55,12 @@ token-identical output to the slot cache. See
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -77,6 +79,17 @@ class _Active:
     generated: list
     admit_step: int
     ttft_s: float
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unobserved pipelined step: its plan, the
+    device token array its observation will fetch, and whether the
+    token vector is slot-major (fused decode fast path) or consumer-row
+    major (ragged step)."""
+    plan: object
+    toks: object
+    slot_major: bool
 
 
 # ------------------------------------------------------------------ engine
@@ -101,7 +114,8 @@ class ServeEngine:
                  schedule: str = "legacy", max_batch_tokens: int = 0,
                  fused: bool = True, prefix_cache: bool = False,
                  speculative_k: int = 0, draft=None,
-                 adaptive_spec: bool = False):
+                 adaptive_spec: bool = False,
+                 pipeline: Optional[bool] = None):
         family = getattr(model.cfg, "family", "dense")
         if family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
@@ -127,6 +141,23 @@ class ServeEngine:
             raise ValueError("adaptive_spec needs speculative_k > 0 "
                              "(it tunes the per-slot draft depth)")
         self.spec_k = int(speculative_k)
+        # Pipelined (depth-1 asynchronous) unified loop: pack + dispatch
+        # step N+1 while step N executes, observe step N's device-
+        # resident tokens afterwards. Default ON for unified serving;
+        # REPRO_SYNC_STEP=1 forces the synchronous loop (honest blocked
+        # per-step timing spans for profiling).
+        if pipeline is None:
+            pipeline = (schedule == "unified"
+                        and not os.environ.get("REPRO_SYNC_STEP"))
+        if pipeline and schedule != "unified":
+            raise ValueError("pipeline=True needs schedule='unified' "
+                             "(legacy prefill-on-admit is inherently "
+                             "synchronous); pass pipeline=False or None")
+        self.pipeline = bool(pipeline)
+        self._inflight: Optional[_InFlight] = None
+        self._host_s = 0.0      # host-side planning/pack/observe seconds
+        self._hidden_s = 0.0    # ... of which spent while a step was in
+        #                         flight on device (the overlap win)
         if schedule == "unified":
             paged = True    # the unified step serves from the paged pool
         elif max_batch_tokens:
@@ -263,11 +294,23 @@ class ServeEngine:
                 eos_id=eos_id, prefix=self.prefix, spec_k=self.spec_k,
                 draft_tables=self.draft_tables,
                 adaptive_spec=adaptive_spec)
+            # XLA:CPU executes donated computations synchronously in the
+            # dispatching thread, which would re-serialize the pipelined
+            # loop — a pipelined engine on CPU trades the in-place cache
+            # donation for asynchronous dispatch (one pool-sized output
+            # buffer per step; REPRO_PIPELINE_DONATE=1 forces donation
+            # back for memory profiling). Donation-capable accelerator
+            # backends dispatch donated computations asynchronously, so
+            # they keep the in-place update.
+            donate = not (self.pipeline
+                          and jax.default_backend() == "cpu"
+                          and not os.environ.get("REPRO_PIPELINE_DONATE"))
             self.exec = RaggedExecutor(model, params, cache,
                                        n_slots=n_slots,
                                        paged_kernel=paged_kernel,
                                        draft=draft_exec,
-                                       spec_k=self.spec_k, **tp_kw)
+                                       spec_k=self.spec_k,
+                                       donate=donate, **tp_kw)
             # shared host state lives in the scheduler; alias it so the
             # introspection surface matches legacy mode
             self._queue = self.sched.queue
@@ -314,6 +357,15 @@ class ServeEngine:
         self.step_count = 0
         self._next_rid = 0
         self._dev_acc = 0.0
+        # pipelined state: idle implies nothing is in flight, but drop
+        # it defensively (and forget the executor's previous-step token
+        # vector + the descriptor-ring parity) so a stale step can never
+        # leak into the next run — warmup reuse must start cold.
+        self._inflight = None
+        self._host_s = self._hidden_s = 0.0
+        if getattr(self.exec, "reset_pipeline", None) is not None:
+            self.exec.reset_pipeline()
+        self.exec.d2h_s = 0.0
         self.events = []
         self.results = {}
         self.metrics = self._fresh_metrics()
@@ -547,12 +599,16 @@ class ServeEngine:
         if self._active:
             table = jnp.asarray(self.tables.table) if self.paged else None
             td = time.perf_counter()
-            logits = self.exec.decode(toks, self._pos, table)
-            self._dev_acc += time.perf_counter() - td
+            d2h0 = self.exec.d2h_s
+            next_toks = self.exec.decode(toks, self._pos, table)
+            # the decode span is compute-only: the executor's (tiny)
+            # token D2H copy is attributed to d2h_s, not device time
+            self._dev_acc += (time.perf_counter() - td
+                              - (self.exec.d2h_s - d2h0))
             self.metrics["decode_steps"] += 1
             for slot, rec in list(self._active.items()):
                 self._pos[slot] += 1          # the fed token was cached
-                rec.generated.append(int(np.argmax(logits[slot, -1])))
+                rec.generated.append(int(next_toks[slot]))
                 self.metrics["generated_tokens"] += 1
                 if self._finished(rec):
                     self._retire(rec)
@@ -564,71 +620,149 @@ class ServeEngine:
                 "occupancy": occ, "active": len(self._active)}
 
     def _step_unified(self) -> dict:
-        t0 = time.perf_counter()
+        if self.pipeline:
+            return self._step_pipelined()
+        return self._step_sync()
+
+    def _plan_and_dispatch(self):
+        """Shared front half of a unified cycle: plan, account metrics,
+        run the draft cycle (speculative mode), and dispatch the packed
+        step WITHOUT blocking. Returns (plan, in_flight) where in_flight
+        is None for an empty plan."""
         plan = self.sched.plan(self.step_count)
         for rid, slot in plan.admitted:
             self.events.append(("admit", rid, slot, self.step_count))
         self.metrics["queue_depth"].append(len(self._queue))
-        occ = len(self._active) / self.n_slots
-        self.metrics["occupancy"].append(occ)
+        self.metrics["occupancy"].append(len(self._active) / self.n_slots)
         self.metrics["resident_kv_bytes"].append(self.resident_kv_bytes())
-        if plan.n_tokens:
+        if not plan.n_tokens:
+            return plan, None
+        if self.spec_k:
+            # draft/verify cycle:
+            # 1. mirror prefill chunks into the draft pool;
+            # 2. ONE scan dispatch proposes k+1 tokens per slot;
+            # 3. the target verifies all k+1 rows per slot in the
+            #    ragged step below (greedy acceptance in observe()).
+            # The draft fetch BLOCKS (acceptance packs host drafts), so
+            # a pipelined speculative cycle overlaps only its pack +
+            # observe host work with the in-flight target step.
+            for dp in self.sched.pack_draft(plan):
+                self.exec.draft_prefill(dp)
+            if plan.spec:
+                tok0, pos0, dtable, dsrc = self.sched.draft_inputs(plan)
+                drafts = self.exec.draft_k(
+                    tok0, pos0, dtable,
+                    dsrc if self.pipeline else None)
+                plan.spec_drafts = {
+                    slot: drafts[:self.spec_k, slot]
+                    for slot, _, _ in plan.spec}
+        if (plan.decode and not plan.prefill and not plan.spec
+                and not plan.cow and self.exec.supports_decode_step):
+            # pure-decode fast path: slot-major compact batch, one
+            # dispatch through model.decode (two Pallas launches per
+            # layer when the fused prologue is enabled). Token-
+            # identical to the ragged pack — single-row decode
+            # through the unified step already matches legacy
+            # model.decode bitwise (golden-tested), and this IS the
+            # legacy decode call shape.
+            tok, dpos, table, src = self.sched.pack_decode(plan)
+            inf = _InFlight(plan,
+                            self.exec.decode_step(tok, dpos, table, src),
+                            True)
+        else:
+            packed = self.sched.pack(plan, kernel_desc=self.paged_kernel)
+            if plan.cow:
+                # COW page copies dispatch BEFORE the step so shared
+                # content is duplicated before any divergent row lands
+                self.exec.copy_pages(plan.cow)
+            inf = _InFlight(plan, self.exec.step(packed), False)
+        if plan.decode or plan.spec:
+            self.metrics["decode_steps"] += 1
+        return plan, inf
+
+    def _observe_tokens(self, inf: _InFlight, toks: np.ndarray,
+                        ahead=None) -> None:
+        """Shared back half: feed a step's fetched tokens through the
+        scheduler and retire what finished."""
+        plan = inf.plan
+        if inf.slot_major:
+            # fused-decode vector is slot-indexed; consumers are decode
+            # rows only (the fast path precondition)
+            toks = toks[[slot for slot, _, _ in plan.decode]]
+        gen_before = self.sched.gen_tokens
+        retired = self.sched.observe(plan, toks, time.perf_counter(),
+                                     ahead=ahead)
+        # actual appended count (speculative steps emit 1..k+1 per
+        # slot depending on acceptance — n_logits would overcount)
+        self.metrics["generated_tokens"] += (self.sched.gen_tokens
+                                             - gen_before)
+        for seq in retired:
+            self._retire_seq(seq)
+
+    def _step_sync(self) -> dict:
+        """The synchronous unified cycle (REPRO_SYNC_STEP /
+        pipeline=False): dispatch, block, observe — the per-step device
+        span is an honest blocked measurement."""
+        t0 = time.perf_counter()
+        plan, inf = self._plan_and_dispatch()
+        if inf is not None:
             td = time.perf_counter()
-            if self.spec_k:
-                # draft/verify cycle, all inside the device span:
-                # 1. mirror prefill chunks into the draft pool;
-                # 2. ONE scan dispatch proposes k+1 tokens per slot;
-                # 3. the target verifies all k+1 rows per slot in the
-                #    ragged step below (greedy acceptance in observe()).
-                for dp in self.sched.pack_draft(plan):
-                    self.exec.draft_prefill(dp)
-                if plan.spec:
-                    tok0, pos0, dtable = self.sched.draft_inputs(plan)
-                    drafts = self.exec.draft_k(tok0, pos0, dtable)
-                    plan.spec_drafts = {
-                        slot: drafts[:self.spec_k, slot]
-                        for slot, _, _ in plan.spec}
-            if (plan.decode and not plan.prefill and not plan.spec
-                    and not plan.cow and self.exec.supports_decode_step):
-                # pure-decode fast path: slot-major compact batch, one
-                # dispatch through model.decode (two Pallas launches per
-                # layer when the fused prologue is enabled). Token-
-                # identical to the ragged pack — single-row decode
-                # through the unified step already matches legacy
-                # model.decode bitwise (golden-tested), and this IS the
-                # legacy decode call shape.
-                tok, dpos, table = self.sched.pack_decode(plan)
-                logits = self.exec.decode_step(tok, dpos, table)
-                dev_s = time.perf_counter() - td
-                rows = [slot for slot, _, _ in plan.decode]
-                toks = np.argmax(logits[rows, -1], axis=-1)
-            else:
-                packed = self.sched.pack(plan,
-                                         kernel_desc=self.paged_kernel)
-                if plan.cow:
-                    # COW page copies dispatch BEFORE the step so shared
-                    # content is duplicated before any divergent row
-                    # lands
-                    self.exec.copy_pages(plan.cow)
-                logits = self.exec.step(packed)
-                dev_s = time.perf_counter() - td
-                toks = np.argmax(logits[:packed["n_logits"], -1],
-                                 axis=-1)
-            gen_before = self.sched.gen_tokens
-            retired = self.sched.observe(plan, toks, time.perf_counter())
-            # actual appended count (speculative steps emit 1..k+1 per
-            # slot depending on acceptance — n_logits would overcount)
-            self.metrics["generated_tokens"] += (self.sched.gen_tokens
-                                                 - gen_before)
-            if plan.decode or plan.spec:
-                self.metrics["decode_steps"] += 1
-            for seq in retired:
-                self._retire_seq(seq)
+            toks = np.asarray(jax.block_until_ready(inf.toks))
+            dev_s = time.perf_counter() - td
+            self._observe_tokens(inf, toks)
             self.metrics["step_s"].append(time.perf_counter() - t0)
             self.metrics["device_s"].append(dev_s)
         self.step_count += 1
         return {"queue_depth": self.metrics["queue_depth"][-1],
-                "occupancy": occ, "active": len(self._active),
+                "occupancy": self.metrics["occupancy"][-1],
+                "active": len(self._active),
+                "packed_tokens": plan.n_tokens}
+
+    def _step_pipelined(self) -> dict:
+        """The depth-1 asynchronous cycle: plan + pack + dispatch step N
+        optimistically (decoding slots assumed to continue, fed tokens
+        injected on device from step N-1's vector), THEN block on step
+        N-1's (n_logits,) int32 tokens — the only D2H of the cycle —
+        and observe them, rolling back step N's rows for any slot whose
+        prediction failed (see ``TokenBudgetScheduler.observe``). All
+        host work between the dispatch and the fetch is hidden under
+        device compute; ``overlap_frac`` reports the hidden fraction.
+
+        Timing spans: a (step_s, device_s) pair is appended only on
+        cycles that OBSERVE a step, with device_s = the token-fetch
+        wait — so span counts equal observed steps and device_s <=
+        step_s still holds. REPRO_SYNC_STEP gives blocked spans
+        instead."""
+        t0 = time.perf_counter()
+        prev = self._inflight
+        self._inflight = None
+        plan, inf = self._plan_and_dispatch()
+        if inf is not None:
+            self.sched.note_dispatch(inf.plan, slot_major=inf.slot_major)
+        seg = time.perf_counter() - t0
+        self._host_s += seg
+        if prev is not None:
+            self._hidden_s += seg       # packed under step N-1's compute
+        observed = prev is not None
+        if observed:
+            tw = time.perf_counter()
+            toks = np.asarray(jax.block_until_ready(prev.toks))
+            wait_s = time.perf_counter() - tw
+            t1 = time.perf_counter()
+            self._observe_tokens(prev, toks,
+                                 ahead=inf.plan if inf else None)
+            seg = time.perf_counter() - t1
+            self._host_s += seg
+            if inf is not None:
+                self._hidden_s += seg   # observed under step N's compute
+        self._inflight = inf
+        if observed:
+            self.metrics["step_s"].append(time.perf_counter() - t0)
+            self.metrics["device_s"].append(wait_s)
+        self.step_count += 1
+        return {"queue_depth": self.metrics["queue_depth"][-1],
+                "occupancy": self.metrics["occupancy"][-1],
+                "active": len(self._active),
                 "packed_tokens": plan.n_tokens}
 
     def _retire_seq(self, seq: SeqState) -> None:
@@ -650,7 +784,12 @@ class ServeEngine:
 
     @property
     def idle(self) -> bool:
-        return not self._queue and not self._active
+        # a dispatched-but-unobserved pipelined step keeps the engine
+        # non-idle even when every slot already retired (the final
+        # in-flight plan can be all-stale after an eos mispredict — one
+        # more drain cycle discards it)
+        return (not self._queue and not self._active
+                and self._inflight is None)
 
     def run(self, requests=None) -> dict[int, RequestResult]:
         """Submit ``requests`` (dicts with tokens/max_new_tokens, see
@@ -732,8 +871,23 @@ class ServeEngine:
             **({"max_batch_tokens": self.max_batch_tokens,
                 # running counter, not a plan_log scan — the log is a
                 # capped ring and may have evicted the peak step
-                "packed_tokens_max": self.sched.packed_tokens_max}
-               if self.schedule == "unified" else {}),
+                "packed_tokens_max": self.sched.packed_tokens_max,
+                "pipeline": self.pipeline,
+                # fraction of host planning/pack/observe seconds spent
+                # while a step was in flight on device (1.0 = every host
+                # cycle fully hidden under compute; 0.0 = synchronous)
+                "overlap_frac": (self._hidden_s / self._host_s
+                                 if self._host_s else 0.0),
+                # mean hidden host milliseconds per observed step — the
+                # absolute per-step latency the pipeline removes
+                "host_ms_hidden": (1e3 * self._hidden_s / len(dev_s)
+                                   if dev_s else 0.0),
+                "mispredicts": self.sched.mispredicts}
+               if self.schedule == "unified" else
+               # legacy: the per-decode-step token D2H fetch, attributed
+               # separately so device_ms_mean stays compute-only
+               {"d2h_ms_mean": (1e3 * self.exec.d2h_s
+                                / max(1, m["decode_steps"]))}),
             **({"speculative_k": self.spec_k,
                 "adaptive_spec": self.sched.adaptive_spec,
                 "spec_cycles": self.sched.spec_cycles,

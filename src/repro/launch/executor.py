@@ -24,6 +24,7 @@ and expose small host-facing methods taking/returning numpy.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -88,20 +89,51 @@ def _prefill_slot_fused(prefill_fn, params, cache, tokens, slot, logits_at):
     return logits, cache
 
 
+# Device-side token injection (pipelined serving): a packed row whose fed
+# token was still in flight at pack time carries ``tok_src[i] >= 0`` — the
+# index of its true token inside the PREVIOUS step's device-resident
+# (W,) token vector. The substitution runs inside the jitted step, so the
+# host never has to wait for step N's tokens to pack and dispatch step
+# N+1. ``tok_src = -1`` rows keep their host-packed token (sync mode
+# passes prev_toks=None and skips the gather entirely).
+def _inject_prev(tokens, prev_toks, tok_src):
+    if prev_toks is None:
+        return tokens
+    fetched = jnp.take(prev_toks, jnp.maximum(tok_src, 0), axis=0)
+    return jnp.where(tok_src[:, None] >= 0, fetched[:, None], tokens)
+
+
 # The whole unified step is one jitted program: scatter-write every packed
-# token's k/v, attend, and read logits at the scheduler-marked rows. The
+# token's k/v, attend, and read logits (or, with ``greedy``, their argmax
+# token ids — device-resident sampling) at the scheduler-marked rows. The
 # cache (the global paged pools) is donated for in-place pool updates;
-# ``step_fn`` (``model.ragged_step``) and the kernel flag are static.
-@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3,))
-def _unified_step(step_fn, paged_kernel, params, cache, tokens, pos,
-                  page_table, logit_rows, ragged_desc):
+# ``step_fn`` (``model.ragged_step``), the kernel flag, and ``greedy``
+# are static.
+#
+# Each donated wrapper also has an ``_async`` twin WITHOUT donation:
+# XLA:CPU dispatches donated computations synchronously (the whole step
+# executes inline in the dispatching thread), which would re-serialize
+# the pipelined loop — a pipelined executor on the CPU backend therefore
+# trades the in-place cache update for asynchronous dispatch (the pool
+# round-trips through a fresh output buffer; see RaggedExecutor(donate=)).
+def _unified_step_impl(step_fn, paged_kernel, greedy, params, cache,
+                       tokens, pos, page_table, logit_rows, ragged_desc,
+                       prev_toks, tok_src):
+    tokens = _inject_prev(tokens, prev_toks, tok_src)
     cache = dict(cache, pos=pos, page_table=page_table)
-    logits, cache = step_fn(params, tokens, cache, logit_rows,
-                            paged_kernel=paged_kernel,
-                            ragged_desc=ragged_desc)
+    out, cache = step_fn(params, tokens, cache, logit_rows,
+                         paged_kernel=paged_kernel, greedy=greedy,
+                         ragged_desc=ragged_desc)
     cache.pop("pos")
     cache.pop("page_table")
-    return logits, cache
+    return out, cache
+
+
+_unified_step = functools.partial(
+    jax.jit, static_argnums=(0, 1, 2),
+    donate_argnums=(4,))(_unified_step_impl)
+_unified_step_async = functools.partial(
+    jax.jit, static_argnums=(0, 1, 2))(_unified_step_impl)
 
 
 # Pure-decode fast path: when a unified plan is decode-only (every packed
@@ -113,13 +145,23 @@ def _unified_step(step_fn, paged_kernel, params, cache, tokens, pos,
 # bitwise identical to the ragged step's decode rows everywhere (same
 # per-row numerics — the property the unified/legacy golden fixtures pin).
 # ``decode_fn`` is static; the cache (the global paged pools) is donated.
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
-def _fused_decode_step(decode_fn, params, cache, tokens, pos, table):
+# Returns the (n_slots,) greedy token ids (device-resident sampling —
+# argmax in the same program, only int32 tokens cross D2H).
+def _fused_decode_step_impl(decode_fn, params, cache, tokens, pos, table,
+                            prev_toks, tok_src):
+    tokens = _inject_prev(tokens, prev_toks, tok_src)
     cache = dict(cache, pos=pos, page_table=table)
     logits, cache = decode_fn(params, tokens, cache)
     cache.pop("pos")
     cache.pop("page_table")
-    return logits, cache
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+
+_fused_decode_step = functools.partial(
+    jax.jit, static_argnums=(0,),
+    donate_argnums=(2,))(_fused_decode_step_impl)
+_fused_decode_step_async = functools.partial(
+    jax.jit, static_argnums=(0,))(_fused_decode_step_impl)
 
 
 # Speculative draft pass: ONE jitted dispatch runs n_steps greedy decode
@@ -133,8 +175,9 @@ def _fused_decode_step(decode_fn, params, cache, tokens, pos, table):
 # Returns all n_steps proposed tokens (n_steps, B) — callers use the
 # first k as drafts (the extra step exists so a fully-accepted block's
 # bonus token leaves no draft-KV hole at pos0+k).
-@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3,))
-def _draft_scan(decode_fn, n_steps, params, cache, tok0, pos0, table):
+def _draft_scan_impl(decode_fn, n_steps, params, cache, tok0, pos0, table,
+                     prev_toks, tok_src):
+    tok0 = _inject_prev(tok0, prev_toks, tok_src)
     cache = dict(cache, pos=pos0, page_table=table)
 
     def body(carry, _):
@@ -150,6 +193,21 @@ def _draft_scan(decode_fn, n_steps, params, cache, tok0, pos0, table):
     return drafts, cache
 
 
+_draft_scan = functools.partial(
+    jax.jit, static_argnums=(0, 1), donate_argnums=(3,))(_draft_scan_impl)
+_draft_scan_async = functools.partial(
+    jax.jit, static_argnums=(0, 1))(_draft_scan_impl)
+
+
+# Greedy sampling for the legacy batched decode: argmax on device so
+# only (n_slots,) int32 tokens cross D2H instead of the full (n_slots,
+# 1, V) logits tensor (which used to be copied inside the timed device
+# span and charged to compute).
+@jax.jit
+def _greedy_rows(logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
 # COW page copy (prefix caching): duplicate src pages' rows into dst
 # pages across every pool leaf before the step that writes the divergent
 # rows. ``copy_fn`` (model.copy_paged_pages) is static; the cache is
@@ -160,9 +218,14 @@ def _draft_scan(decode_fn, n_steps, params, cache, tok0, pos0, table):
 # inside a timed pass. Under a mesh the pools arrive sharded (heads on
 # "model", page axis whole) and jit partitions the per-page
 # gather/scatter over the head shards.
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
-def _copy_pages(copy_fn, cache, src, dst):
+def _copy_pages_impl(copy_fn, cache, src, dst):
     return copy_fn(cache, src, dst)
+
+
+_copy_pages = functools.partial(
+    jax.jit, static_argnums=(0,), donate_argnums=(1,))(_copy_pages_impl)
+_copy_pages_async = functools.partial(
+    jax.jit, static_argnums=(0,))(_copy_pages_impl)
 
 
 class _CopyPagesMixin:
@@ -187,8 +250,10 @@ class _CopyPagesMixin:
         dst = np.zeros((width,), np.int32)
         for i, (s, d) in enumerate(pairs):
             src[i], dst[i] = s, d
-        self.cache = _copy_pages(copy_fn, self.cache, jnp.asarray(src),
-                                 jnp.asarray(dst))
+        fn = (_copy_pages if getattr(self, "_donate", True)
+              else _copy_pages_async)
+        self.cache = fn(copy_fn, self.cache, jnp.asarray(src),
+                        jnp.asarray(dst))
 
 
 # ------------------------------------------------- shared mesh validation
@@ -235,6 +300,7 @@ class LegacyExecutor(_CopyPagesMixin):
         self.paged, self.mesh = paged, mesh
         self.n_slots = n_slots
         self.n_dispatch = 0     # device calls issued (hot-loop accounting)
+        self.d2h_s = 0.0        # token D2H seconds (attributed separately)
         if mesh is None:
             if paged:
                 # paged prefill/decode round-trip the ENTIRE global pool
@@ -368,9 +434,13 @@ class LegacyExecutor(_CopyPagesMixin):
 
     def decode(self, toks: np.ndarray, pos: np.ndarray,
                table=None) -> np.ndarray:
-        """One batched decode step over all slots; returns logits
-        (n_slots, 1, V) as numpy. Blocks on the result so the engine's
-        timed device span measures execution, not enqueue."""
+        """One batched decode step over all slots; returns the greedy
+        next token per slot as (n_slots,) int32 numpy. The argmax runs
+        on device (``_greedy_rows``) so the D2H copy is n_slots ints,
+        not the logits tensor; the copy itself is timed into ``d2h_s``
+        (not the engine's device span — it is transfer, not compute).
+        Blocks on the tokens so the engine's timed device span measures
+        execution, not enqueue."""
         self.n_dispatch += 1
         cache = dict(self.cache, pos=jnp.asarray(pos))
         if table is not None:
@@ -379,7 +449,11 @@ class LegacyExecutor(_CopyPagesMixin):
         cache.pop("pos")
         cache.pop("page_table", None)
         self.cache = cache
-        return np.asarray(jax.block_until_ready(logits))
+        tokens = jax.block_until_ready(_greedy_rows(logits))
+        td = time.perf_counter()
+        out = np.asarray(tokens)
+        self.d2h_s += time.perf_counter() - td
+        return out
 
 
 # --------------------------------------------------------- ragged executor
@@ -393,16 +467,31 @@ class RaggedExecutor(_CopyPagesMixin):
                  paged_kernel: bool = False,
                  mesh=None, tp_axis: str = "model",
                  tp_mode: str = "gather", tp_kernels: bool = False,
-                 draft=None, spec_k: int = 0):
+                 draft=None, spec_k: int = 0, donate: bool = True):
         if model.ragged_step is None:
             raise NotImplementedError(
                 f"family {getattr(model.cfg, 'family', '?')!r} has no "
                 f"ragged (unified-step) forward")
         self.model, self.params, self.cache = model, params, cache
+        # donate=False picks the non-donating executables so dispatch
+        # stays asynchronous on XLA:CPU (which runs donated computations
+        # inline) — the pipelined engine's requirement; costs one pool-
+        # sized output buffer per step instead of the in-place update.
+        # The shard_mapped mesh step is non-donating either way.
+        self._donate = bool(donate)
         self.n_slots = n_slots
         self.paged_kernel = paged_kernel
         self.mesh = mesh
         self.n_dispatch = 0     # device calls issued (hot-loop accounting)
+        self.d2h_s = 0.0        # token D2H seconds (engine resets it)
+        # previous step's device-resident token vector (the injection
+        # source for rows packed before their fed token was observed —
+        # pipelined serving). None until the first step; chained by
+        # step()/decode_step(). Widths coincide across the two step
+        # kinds: the ragged vector is n_slots*(spec_k+1) wide and the
+        # fused-decode vector n_slots wide, and the fast path only
+        # engages at spec_k == 0.
+        self._prev = None
         # speculative draft side: (model, params, cache) over a parallel
         # paged pool. Always plain-jit (never shard_mapped): only the
         # TARGET verify pass determines output tokens, so draft numerics
@@ -451,6 +540,12 @@ class RaggedExecutor(_CopyPagesMixin):
         pk = self.paged_kernel
         tp_kw = dict(tp_axis=tp_axis, tp_mode=tp_mode, tp_kernels=tp_kernels)
 
+        # the step returns the (R,) greedy token ids instead of logits:
+        # the logits are replicated across the tp shards (tp_mode
+        # "gather" materializes the full vocab row on every shard), so
+        # the in-shard argmax is replicated too — device-resident
+        # sampling with bitwise tp-identical tokens. prev_toks/tok_src
+        # (pipelined token injection) replicate like the descriptors.
         if pk:
             desc_specs = shlib.ragged_desc_specs(
                 {k: jax.ShapeDtypeStruct((1, 1), jnp.int32)
@@ -458,49 +553,76 @@ class RaggedExecutor(_CopyPagesMixin):
                 | {k: jax.ShapeDtypeStruct((1,), jnp.int32)
                    for k in ("lengths", "inv_seq", "inv_qi")})
 
-            def rag(p, t, c, lr, rd):
+            def rag(p, t, c, lr, rd, prev, src):
+                t = _inject_prev(t, prev, src)
                 return model.ragged_step(p, t, c, lr, paged_kernel=True,
-                                         ragged_desc=rd, **tp_kw)
+                                         ragged_desc=rd, greedy=True,
+                                         **tp_kw)
 
-            in_specs = (pspecs, P(None, None), cdict, P(None), desc_specs)
+            in_specs = (pspecs, P(None, None), cdict, P(None), desc_specs,
+                        P(None), P(None))
         else:
-            def rag(p, t, c, lr):
-                return model.ragged_step(p, t, c, lr, **tp_kw)
+            def rag(p, t, c, lr, prev, src):
+                t = _inject_prev(t, prev, src)
+                return model.ragged_step(p, t, c, lr, greedy=True, **tp_kw)
 
-            in_specs = (pspecs, P(None, None), cdict, P(None))
+            in_specs = (pspecs, P(None, None), cdict, P(None),
+                        P(None), P(None))
         self._mesh_step = jax.jit(shard_map(
             rag, mesh=mesh, in_specs=in_specs,
-            out_specs=(P(None, None, None), cdict), check_vma=False))
+            out_specs=(P(None), cdict), check_vma=False))
 
-    def step(self, packed: dict) -> np.ndarray:
-        """Run one packed unified step; returns logits (R, 1, V) as numpy
-        (only the first ``packed['n_logits']`` rows are real). Blocks on
-        the result so callers' timed spans measure execution, not
-        enqueue."""
+    def _prev_arr(self, width: int):
+        """The previous step's device token vector (injection source),
+        or inert zeros before the first step / after a reset."""
+        if self._prev is None or self._prev.shape[0] != width:
+            self._prev = jnp.zeros((width,), jnp.int32)
+        return self._prev
+
+    def reset_pipeline(self) -> None:
+        """Forget the previous step's device tokens (engine reset):
+        a fresh run must not inject a stale vector. Injection is already
+        structurally dead for fresh sequences (tok_src = -1), so this is
+        defense in depth."""
+        self._prev = None
+
+    def step(self, packed: dict):
+        """Run one packed unified step; returns the greedy token ids at
+        the packed logit rows as a DEVICE (R,) int32 array (only the
+        first ``packed['n_logits']`` entries are real) — sampling runs
+        inside the jitted step and the call does NOT block, so a
+        pipelined caller can keep packing while the step executes.
+        Synchronous callers block + ``np.asarray`` the result
+        themselves."""
         self.n_dispatch += 1
         tokens = jnp.asarray(packed["tokens"])
         pos = jnp.asarray(packed["pos"])
         ptab = jnp.asarray(packed["page_table"])
         lrows = jnp.asarray(packed["logit_rows"])
+        prev = self._prev_arr(lrows.shape[0])
+        src = jnp.asarray(packed["tok_src"])
         desc = packed.get("ragged_desc")
         if desc is not None:
             desc = {k: jnp.asarray(v) for k, v in desc.items()}
         if self.mesh is None:
-            logits, self.cache = _unified_step(
-                self.model.ragged_step, self.paged_kernel, self.params,
-                self.cache, tokens, pos, ptab, lrows, desc)
-            return np.asarray(jax.block_until_ready(logits))
-        cache = dict(self.cache, pos=pos, page_table=ptab)
-        if self.paged_kernel:
-            logits, cache = self._mesh_step(self.params, tokens, cache,
-                                            lrows, desc)
+            fn = _unified_step if self._donate else _unified_step_async
+            toks, self.cache = fn(
+                self.model.ragged_step, self.paged_kernel, True,
+                self.params, self.cache, tokens, pos, ptab, lrows, desc,
+                prev, src)
         else:
-            logits, cache = self._mesh_step(self.params, tokens, cache,
-                                            lrows)
-        cache.pop("pos")
-        cache.pop("page_table")
-        self.cache = cache
-        return np.asarray(jax.block_until_ready(logits))
+            cache = dict(self.cache, pos=pos, page_table=ptab)
+            if self.paged_kernel:
+                toks, cache = self._mesh_step(self.params, tokens, cache,
+                                              lrows, desc, prev, src)
+            else:
+                toks, cache = self._mesh_step(self.params, tokens, cache,
+                                              lrows, prev, src)
+            cache.pop("pos")
+            cache.pop("page_table")
+            self.cache = cache
+        self._prev = toks
+        return toks
 
     @property
     def supports_decode_step(self) -> bool:
@@ -508,18 +630,25 @@ class RaggedExecutor(_CopyPagesMixin):
         return self._decode_fn is not None
 
     def decode_step(self, tokens: np.ndarray, pos: np.ndarray,
-                    table: np.ndarray) -> np.ndarray:
+                    table: np.ndarray, tok_src=None):
         """One batched decode over the compact (n_slots, 1) layout — the
         pure-decode fast path (see ``_fused_decode_step``). Non-decoding
         slots carry a dummy token at position 0 against the null table
-        row (inert writes, discarded logits). Returns logits
-        (n_slots, 1, V) as numpy; blocks so timed spans measure
-        execution, not enqueue."""
+        row (inert writes, discarded outputs). Returns the greedy token
+        per slot as a DEVICE (n_slots,) int32 array without blocking
+        (see ``step``)."""
         self.n_dispatch += 1
-        logits, self.cache = _fused_decode_step(
+        if tok_src is None:
+            tok_src = np.full((self.n_slots,), -1, np.int32)
+        prev = self._prev_arr(self.n_slots)
+        fn = (_fused_decode_step if self._donate
+              else _fused_decode_step_async)
+        toks, self.cache = fn(
             self._decode_fn, self.params, self.cache,
-            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(table))
-        return np.asarray(jax.block_until_ready(logits))
+            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(table),
+            prev, jnp.asarray(tok_src))
+        self._prev = toks
+        return toks
 
     # ---------------------------------------------------- speculative draft
 
@@ -529,23 +658,34 @@ class RaggedExecutor(_CopyPagesMixin):
         discarded). Plain jit even under a mesh — a separate compile
         keyed on the draft model's ``ragged_step``."""
         self.n_dispatch += 1
-        _, self.draft_cache = _unified_step(
-            self.draft_model.ragged_step, False, self.draft_params,
+        fn = _unified_step if self._donate else _unified_step_async
+        _, self.draft_cache = fn(
+            self.draft_model.ragged_step, False, False, self.draft_params,
             self.draft_cache, jnp.asarray(packed["tokens"]),
             jnp.asarray(packed["pos"]),
             jnp.asarray(packed["page_table"]),
-            jnp.asarray(packed["logit_rows"]), None)
+            jnp.asarray(packed["logit_rows"]), None, None, None)
 
     def draft_k(self, tok0: np.ndarray, pos0: np.ndarray,
-                table: np.ndarray) -> np.ndarray:
+                table: np.ndarray, tok_src=None) -> np.ndarray:
         """Propose ``spec_k + 1`` greedy tokens per slot in ONE dispatch
         (``_draft_scan``); returns them as (spec_k + 1, n_slots) numpy.
         The scan feeds each slot's argmax back at the next position, so
         the draft pool ends the call holding KV for every proposed
-        position — including the extra row the bonus-token case needs."""
+        position — including the extra row the bonus-token case needs.
+        ``tok_src`` (pipelined mode) injects in-flight base tokens from
+        the previous TARGET step's device vector; the blocking fetch of
+        the drafts therefore also waits out that step — speculative
+        cycles overlap only their pack/observe host work."""
         self.n_dispatch += 1
-        drafts, self.draft_cache = _draft_scan(
+        if tok_src is None:
+            prev, src = None, None
+        else:
+            prev = self._prev_arr(self.n_slots * (self.spec_k + 1))
+            src = jnp.asarray(tok_src)
+        fn = _draft_scan if self._donate else _draft_scan_async
+        drafts, self.draft_cache = fn(
             self.draft_model.decode, self.spec_k + 1, self.draft_params,
             self.draft_cache, jnp.asarray(tok0), jnp.asarray(pos0),
-            jnp.asarray(table))
+            jnp.asarray(table), prev, src)
         return np.asarray(jax.block_until_ready(drafts))

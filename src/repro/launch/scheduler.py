@@ -79,6 +79,14 @@ class SeqState:
     admit_step: int = 0
     admit_order: int = 0
     ttft_s: float = 0.0
+    # pipelined (one-step-ahead) bookkeeping: ``inflight`` counts tokens
+    # this slot is PREDICTED to append in the dispatched-but-unobserved
+    # step (0 in synchronous mode); ``pending_src`` is the index of the
+    # slot's next fed token inside that step's device token vector
+    # (consumer-row index for a ragged step, slot index for the
+    # slot-major fused decode step; -1 when nothing is in flight).
+    inflight: int = 0
+    pending_src: int = -1
 
     @property
     def prompt_len(self) -> int:
@@ -116,6 +124,16 @@ class StepPlan:
     draft_prefill: list = dataclasses.field(default_factory=list)
     admitted: list = dataclasses.field(default_factory=list)
     cow: list = dataclasses.field(default_factory=list)
+    # pipelined mode: slot -> index of the slot's fed token inside the
+    # PREVIOUS (in-flight) step's device token vector, -1 when the fed
+    # token is a host value (``pack`` emits these as ``tok_src``)
+    srcs: dict = dataclasses.field(default_factory=dict)
+    # slots whose rows in THIS plan were invalidated by the previous
+    # step's observation (the slot retired, or a speculative verify
+    # accepted fewer rows than predicted): ``observe`` discards their
+    # outputs, ``note_dispatch`` already charged them — see
+    # ``_mark_stale``
+    stale: set = dataclasses.field(default_factory=set)
 
     def spec_rows(self, slot: int) -> int:
         """Verify rows slot's item packs this step (its k' + 1)."""
@@ -210,14 +228,23 @@ class TokenBudgetScheduler:
         self.packed_tokens_max = 0
         self.n_plans = 0
         # pack()/_kernel_desc() write into preallocated buffers reused
-        # across steps (shapes are fixed per engine config); allocated
-        # lazily because n_ptab comes from the tables
-        self._buf: dict = {}
+        # across steps (shapes are fixed per engine config). A 2-DEEP
+        # RING, not a single set: with one-step-ahead dispatch, step N's
+        # descriptors may still be in flight (jnp.asarray of a numpy
+        # buffer can alias it on CPU) while pack() fills step N+1's —
+        # a single reused set would let the fill race the dispatch.
+        # Alternating parity means a buffer is only rewritten after the
+        # NEXT step was dispatched, i.e. after its own step's arrays
+        # were consumed. Allocated lazily (n_ptab comes from the tables).
+        self._bufs: list = [{}, {}]
+        self._buf_parity = 0
+        self.mispredicts = 0    # optimistic plans invalidated by observe
 
     def reset(self) -> None:
-        """Drop per-run bookkeeping (log, counters, admission order) on an
-        idle scheduler — the engine's warmup/steady-state ``reset()``
-        hook. Slot and page state are already back at rest when idle."""
+        """Drop per-run bookkeeping (log, counters, admission order,
+        descriptor-ring parity) on an idle scheduler — the engine's
+        warmup/steady-state ``reset()`` hook. Slot and page state are
+        already back at rest when idle."""
         assert self.idle, "reset() needs an idle scheduler"
         self.plan_log.clear()
         self.packed_tokens_max = 0
@@ -227,6 +254,8 @@ class TokenBudgetScheduler:
         self.spec_drafted = self.spec_accepted = self.spec_cycles = 0
         self._accept_ema.clear()
         self.gen_tokens = 0
+        self.mispredicts = 0
+        self._buf_parity = 0
 
     # ------------------------------------------------------------ planning
 
@@ -271,7 +300,24 @@ class TokenBudgetScheduler:
             seq = self.active[slot]
             if not seq.decoding:
                 continue
-            pos = seq.prompt_len + len(seq.generated) - 1
+            # pipelined (one-step-ahead) planning is OPTIMISTIC: a slot
+            # with an unobserved step in flight is assumed to append its
+            # predicted ``inflight`` tokens and continue, so this plan
+            # packs it at the predicted next position with its fed token
+            # sourced from the in-flight step's device vector
+            # (``srcs``). A slot the in-flight step is predicted to
+            # RETIRE (budget exhausted) is simply not packed. observe()
+            # reconciles: eos retirement or a short speculative accept
+            # marks the optimistic rows stale and rewinds page state
+            # (``_mark_stale`` / the shrink in ``_observe_spec``).
+            # Synchronous mode never sets ``inflight``, so n_eff and
+            # src degenerate to the original values.
+            n_eff = len(seq.generated) + seq.inflight
+            if seq.inflight and n_eff >= seq.req.max_new_tokens:
+                continue        # predicted to retire in the in-flight step
+            pos = seq.prompt_len + n_eff - 1
+            fed = seq.generated[-1] if seq.generated else 0
+            plan.srcs[slot] = seq.pending_src if seq.inflight else -1
             if self.spec_k:
                 kx = self._slot_k(slot)
                 # target pages cover the k' verify rows this step packs;
@@ -279,12 +325,12 @@ class TokenBudgetScheduler:
                 # steps (one compile), so its pages cover the full cap
                 self.tables.ensure(slot, pos + kx)
                 self.draft_tables.ensure(slot, pos + self.spec_k)
-                plan.spec.append((slot, seq.generated[-1], pos))
+                plan.spec.append((slot, fed, pos))
                 plan.spec_k_of[slot] = kx
                 budget -= kx + 1
             else:
                 self.tables.ensure(slot, pos)
-                plan.decode.append((slot, seq.generated[-1], pos))
+                plan.decode.append((slot, fed, pos))
                 budget -= 1
         # 2. in-flight prefill chunks, oldest admission first (mirrored
         # into the draft pool in speculative mode: the draft model needs
@@ -387,23 +433,28 @@ class TokenBudgetScheduler:
     # ------------------------------------------------------------- packing
 
     def _buffers(self, kernel_desc: bool) -> dict:
-        """The preallocated host arrays ``pack`` fills — allocated once
-        (shapes are fixed per engine config) and RESET + reused every
+        """The preallocated host arrays ``pack`` fills — a 2-deep ring
+        (see ``__init__``: step N's arrays may still back an in-flight
+        dispatch while step N+1 packs), each set allocated once (shapes
+        are fixed per engine config) and RESET + reused every other
         step, so the serving hot loop stops paying a numpy allocation
         per descriptor per step. The returned views are valid until the
-        next ``pack()`` call; the executor copies them to device
-        (``jnp.asarray``) immediately."""
-        if not self._buf:
+        next-but-one ``pack()`` call; the executor copies (or aliases)
+        them to device (``jnp.asarray``) immediately."""
+        buf = self._bufs[self._buf_parity]
+        self._buf_parity ^= 1
+        if not buf:
             T, R, n_ptab = (self.max_batch_tokens, self.n_slots,
                             self.tables.n_ptab)
             q_width = min(T, self.prefill_chunk) if self.prefill_chunk else T
             # a spec verify item is k+1 rows (and its consumer reads k+1
             # logit rows) — widen the per-item and logit buffers for it
             q_width = max(q_width, self.spec_k + 1)
-            self._buf = {
+            buf.update({
                 "tokens": np.zeros((T,), np.int32),
                 "pos": np.zeros((T,), np.int32),
                 "slot_of": np.empty((T,), np.int32),
+                "tok_src": np.empty((T,), np.int32),
                 "logit_rows": np.zeros((R * (self.spec_k + 1),), np.int32),
                 "ptab": np.zeros((T, n_ptab), np.int32),
                 "qidx": np.zeros((R, q_width), np.int32),
@@ -412,11 +463,12 @@ class TokenBudgetScheduler:
                 "table": np.zeros((R, n_ptab), np.int32),
                 "inv_seq": np.zeros((T,), np.int32),
                 "inv_qi": np.zeros((T,), np.int32),
-            }
-        b = self._buf
+            })
+        b = buf
         for name in ("tokens", "pos", "logit_rows", "ptab"):
             b[name][...] = 0
         b["slot_of"].fill(-1)
+        b["tok_src"].fill(-1)
         if kernel_desc:
             for name in ("qidx", "lengths", "table", "inv_seq", "inv_qi"):
                 b[name][...] = 0
@@ -439,20 +491,25 @@ class TokenBudgetScheduler:
         tokens = buf["tokens"]
         pos = buf["pos"]
         slot_of = buf["slot_of"]
+        tok_src = buf["tok_src"]
         items = []                      # (slot, start row, q_len, last pos)
         last_row = {}                   # slot -> its item's last packed row
         i = 0
         for slot, tok, p in plan.decode:
             tokens[i], pos[i], slot_of[i] = tok, p, slot
+            tok_src[i] = plan.srcs.get(slot, -1)
             items.append((slot, i, 1, p))
             last_row[slot] = i
             i += 1
         spec_start = {}                 # slot -> its verify item's first row
         for slot, tok, p in plan.spec:
             # verify item: [last token, k' drafts] at positions p..p+k'
-            # (k' <= spec_k when adaptive speculation trimmed the slot)
+            # (k' <= spec_k when adaptive speculation trimmed the slot);
+            # only the BASE row can be an in-flight device token — the
+            # draft rows are host values from this cycle's draft scan
             w = plan.spec_rows(slot)
             tokens[i] = tok
+            tok_src[i] = plan.srcs.get(slot, -1)
             tokens[i + 1:i + w] = plan.spec_drafts[slot][:w - 1]
             pos[i:i + w] = p + np.arange(w)
             slot_of[i:i + w] = slot
@@ -486,7 +543,7 @@ class TokenBudgetScheduler:
         ptab[valid] = self.tables.table[slot_of[valid]]
         packed = {"tokens": tokens[:, None], "pos": pos,
                   "page_table": ptab, "logit_rows": logit_rows,
-                  "n_logits": j}
+                  "tok_src": tok_src, "n_logits": j}
         if kernel_desc:
             packed["ragged_desc"] = self._kernel_desc(items, buf)
         return packed
@@ -576,35 +633,65 @@ class TokenBudgetScheduler:
 
     def draft_inputs(self, plan: StepPlan):
         """Host inputs for the k-step draft scan: (tok0 (n_slots, 1),
-        pos0 (n_slots,), table (n_slots, n_ptab)). Non-drafting slots
-        (free, or mid-prefill) feed a dummy token at position 0 against
-        the NULL table row so their scan writes are inert — their real
-        draft pages must not be touched."""
+        pos0 (n_slots,), table (n_slots, n_ptab), src (n_slots,)).
+        Non-drafting slots (free, or mid-prefill) feed a dummy token at
+        position 0 against the NULL table row so their scan writes are
+        inert — their real draft pages must not be touched. ``src``
+        carries the plan's device-token sources (pipelined mode; -1
+        rows keep the host token)."""
         tok0 = np.zeros((self.n_slots, 1), np.int32)
         pos0 = np.zeros((self.n_slots,), np.int32)
         table = np.zeros_like(self.draft_tables.table)
+        src = np.full((self.n_slots,), -1, np.int32)
         for slot, tok, p in plan.spec:
             tok0[slot, 0] = tok
             pos0[slot] = p
             table[slot] = self.draft_tables.table[slot]
-        return tok0, pos0, table
+            src[slot] = plan.srcs.get(slot, -1)
+        return tok0, pos0, table, src
 
     def pack_decode(self, plan: StepPlan):
         """Compact slot-major inputs for the pure-decode fast path:
-        (tokens (n_slots, 1), pos (n_slots,), table (n_slots, n_ptab)).
-        One row per SLOT (not per token) — the fused decode step runs at
-        batch = n_slots, a single fixed compile shape. Non-decoding
-        slots feed a dummy token at position 0 against the NULL table
-        row so their cache writes land on the null page. Only valid for
-        plans that are pure decode (no prefill/spec/cow work)."""
+        (tokens (n_slots, 1), pos (n_slots,), table (n_slots, n_ptab),
+        src (n_slots,)). One row per SLOT (not per token) — the fused
+        decode step runs at batch = n_slots, a single fixed compile
+        shape. Non-decoding slots feed a dummy token at position 0
+        against the NULL table row so their cache writes land on the
+        null page. ``src`` carries the plan's device-token sources
+        (pipelined mode). Only valid for plans that are pure decode (no
+        prefill/spec/cow work)."""
         tok = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         table = np.zeros_like(self.tables.table)
+        src = np.full((self.n_slots,), -1, np.int32)
         for slot, t, p in plan.decode:
             tok[slot, 0] = t
             pos[slot] = p
             table[slot] = self.tables.table[slot]
-        return tok, pos, table
+            src[slot] = plan.srcs.get(slot, -1)
+        return tok, pos, table, src
+
+    # --------------------------------------------------- pipelined dispatch
+
+    def note_dispatch(self, plan: StepPlan, *, slot_major: bool = False
+                      ) -> None:
+        """Record that ``plan`` was dispatched without waiting for its
+        tokens (one-step-ahead mode): every logit consumer's slot now
+        has predicted-but-unobserved tokens in flight, and its next fed
+        token lives in the dispatched step's device token vector —
+        ``pending_src`` is the index the NEXT plan's rows inject it
+        from (consumer-row order for a ragged step; ``slot_major=True``
+        for the fused decode step, whose output vector is indexed by
+        slot)."""
+        i = 0
+        for kind, slot in plan.logit_consumers:
+            w = plan.spec_rows(slot) if kind == "spec" else 1
+            seq = self.active[slot]
+            seq.inflight += w
+            # a spec item's base token for the FOLLOWING step is its
+            # last verify row's argmax (the bonus/continuation row)
+            seq.pending_src = slot if slot_major else i + w - 1
+            i += w
 
     # ---------------------------------------------------------- observation
 
@@ -627,8 +714,27 @@ class TokenBudgetScheduler:
             self.draft_tables.release(seq.slot)
         self.free.append(seq.slot)
 
+    def _mark_stale(self, slot: int, ahead: Optional[StepPlan]) -> None:
+        """Invalidate a slot's optimistically-packed rows in the already-
+        dispatched next plan (``ahead``): the prediction they were packed
+        under just failed (the slot retired on eos, or a speculative
+        verify accepted fewer rows than planned). ``observe`` will skip
+        the stale consumers — their device writes land strictly past the
+        true valid length (or in released pages) and are overwritten
+        before they are ever attendable (see launch/README.md)."""
+        if ahead is None or slot in ahead.stale:
+            return
+        if any(s == slot for _, s in ahead.logit_consumers):
+            ahead.stale.add(slot)
+            self.mispredicts += 1
+            seq = self.active.get(slot)
+            if seq is not None:
+                seq.inflight = 0
+                seq.pending_src = -1
+
     def _observe_spec(self, plan: StepPlan, seq: SeqState,
-                      ys: np.ndarray, retired: list) -> None:
+                      ys: np.ndarray, retired: list,
+                      ahead: Optional[StepPlan] = None) -> None:
         """Greedy acceptance for one verify item: every row of ``ys`` is
         the target's argmax given [prompt, generated, drafts[:j]] — append
         row j while the drafts keep matching (longest accepted prefix),
@@ -637,17 +743,23 @@ class TokenBudgetScheduler:
         Every appended token is a target argmax, which is the whole
         token-identity argument. Afterwards both pools shrink back to the
         true sequence length so page tables and refcounts equal a
-        never-drafted run's."""
+        never-drafted run's — UNLESS the prediction fully held and the
+        next step is already in flight over the predicted extent, in
+        which case the pages past the true length are exactly the ones
+        that step is using and the shrink is deferred to its own
+        observation."""
         slot = seq.slot
         k = plan.spec_k_of.get(slot, self.spec_k)
         drafts = plan.spec_drafts[slot][:k]
         self.spec_cycles += 1
         self.spec_drafted += k
         n_acc = 0
+        n_app = 0
         done = False
         for j in range(k):
             tok = int(ys[j])
             seq.generated.append(tok)
+            n_app += 1
             self.gen_tokens += 1
             accepted = tok == int(drafts[j])
             if accepted:
@@ -659,6 +771,7 @@ class TokenBudgetScheduler:
         else:
             # all k drafts accepted -> the k+1-th row is a free token
             seq.generated.append(int(ys[k]))
+            n_app += 1
             self.gen_tokens += 1
             done = self._finished(seq)
         if self.adaptive_spec:
@@ -669,29 +782,59 @@ class TokenBudgetScheduler:
             self._accept_ema[slot] = (frac if old is None
                                       else 0.5 * old + 0.5 * frac)
         if done:
+            self._mark_stale(slot, ahead)
             self._retire_slot(seq, retired)
-        else:
-            valid = seq.prompt_len + len(seq.generated) - 1
-            self.tables.shrink(slot, valid)
-            self.draft_tables.shrink(slot, valid)
+            return
+        if n_app == k + 1 and seq.inflight > n_app:
+            # the optimistic prediction held AND the next step is in
+            # flight at the predicted positions — its pages must stay
+            seq.inflight -= n_app
+            return
+        # short acceptance (or nothing in flight): the continuation rows
+        # packed ahead (if any) assumed a longer sequence — discard them
+        # and rewind both pools to the true length, leaving page tables
+        # and refcounts equal to a synchronous trajectory's
+        self._mark_stale(slot, ahead)
+        seq.inflight = 0
+        seq.pending_src = -1
+        valid = seq.prompt_len + len(seq.generated) - 1
+        self.tables.shrink(slot, valid)
+        self.draft_tables.shrink(slot, valid)
 
-    def observe(self, plan: StepPlan, toks: np.ndarray, now: float) -> list:
+    def observe(self, plan: StepPlan, toks: np.ndarray, now: float,
+                ahead: Optional[StepPlan] = None) -> list:
         """Apply one step's argmax tokens (aligned with
         ``plan.logit_consumers``; a "spec" consumer takes its
         ``spec_rows(slot)`` rows); returns the retired ``SeqState``s (slot freed, pages
-        released — the engine turns them into results)."""
+        released — the engine turns them into results).
+
+        ``ahead`` (pipelined mode) is the NEXT plan, already dispatched
+        under the optimistic assumption that every slot here continues:
+        when that assumption fails (eos retirement, short speculative
+        accept) the slot's rows in ``ahead`` are marked stale and its
+        page state rewound (``_mark_stale``/``_observe_spec``). Rows of
+        ``plan`` itself that an EARLIER observation marked stale are
+        skipped — their slot retired (or rewound) before this step's
+        tokens arrived, so its outputs here belong to a dead
+        prediction."""
         retired = []
         i = 0
         for kind, slot in plan.logit_consumers:
+            w = plan.spec_rows(slot) if kind == "spec" else 1
+            if slot in plan.stale:
+                i += w
+                continue
             seq = self.active[slot]
             if kind == "spec":
-                w = plan.spec_rows(slot)
-                self._observe_spec(plan, seq, toks[i:i + w], retired)
+                self._observe_spec(plan, seq, toks[i:i + w], retired,
+                                   ahead)
                 i += w
                 continue
             seq.generated.append(int(toks[i]))
             self.gen_tokens += 1
             i += 1
+            if seq.inflight:
+                seq.inflight -= 1
             if kind == "first":
                 seq.ttft_s = now - seq.req.submit_time
                 if self.prefix is not None:
@@ -700,6 +843,7 @@ class TokenBudgetScheduler:
                     self.prefix.register(seq.req.prompt,
                                          self.tables.owned_pages(slot))
             if self._finished(seq):
+                self._mark_stale(slot, ahead)
                 self._retire_slot(seq, retired)
         return retired
 

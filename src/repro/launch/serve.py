@@ -156,7 +156,8 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                     schedule: str = "legacy", max_batch_tokens: int = 0,
                     warmup: int = 0, prefix_cache: bool = False,
                     shared_prefix: int = 0, speculative: int = 0,
-                    adaptive_spec: bool = False):
+                    adaptive_spec: bool = False,
+                    pipeline: Optional[bool] = None):
     """Quantize then serve a workload through the engine.
 
     Default (``mixed=False``): ``batch`` uniform-length requests so
@@ -183,7 +184,12 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
     checkpoint and verifies them in one ragged target step — output
     stays token-identical to ``speculative=0``. ``adaptive_spec=True``
     lowers each slot's per-cycle draft depth toward its running
-    acceptance rate (k stays the hard cap; output unchanged)."""
+    acceptance rate (k stays the hard cap; output unchanged).
+    ``pipeline`` selects the depth-1 asynchronous unified loop (pack +
+    dispatch step N+1 while N runs on device; token-identical; see
+    launch/README.md) — default None means ON for unified unless
+    REPRO_SYNC_STEP is set; ``pipeline=False`` forces the synchronous
+    loop with honest blocked per-step timing spans."""
     cfg, model, params, mem = build_served_model(
         arch, transform, w_bits, a_bits, kv_bits, smoke, seed,
         cfg_overrides=cfg_overrides)
@@ -209,7 +215,7 @@ def serve_benchmark(arch: str = "catlm_60m", batch: int = 4,
                          max_batch_tokens=max_batch_tokens,
                          prefix_cache=prefix_cache,
                          speculative_k=speculative, draft=draft,
-                         adaptive_spec=adaptive_spec)
+                         adaptive_spec=adaptive_spec, pipeline=pipeline)
     if warmup:
         results, summary = run_steady(engine, requests, passes=int(warmup))
     else:
@@ -290,6 +296,9 @@ def validate_flags(ap: argparse.ArgumentParser, args) -> None:
     if args.adaptive_spec and not args.speculative:
         ap.error("--adaptive-spec needs --speculative K (it tunes the "
                  "per-slot draft depth below K)")
+    if args.pipeline and not unified:
+        ap.error("--pipeline needs --schedule unified (legacy "
+                 "prefill-on-admit is inherently synchronous)")
 
 
 def main() -> None:
@@ -352,6 +361,14 @@ def main() -> None:
                     help="lower each slot's per-cycle draft depth toward "
                          "its running acceptance rate (K stays the hard "
                          "cap; needs --speculative)")
+    ap.add_argument("--pipeline", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="depth-1 asynchronous unified loop: pack + "
+                         "dispatch step N+1 while N runs on device "
+                         "(token-identical; default ON for --schedule "
+                         "unified unless REPRO_SYNC_STEP is set); "
+                         "--no-pipeline forces the synchronous loop with "
+                         "blocked per-step timing spans")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
     validate_flags(ap, args)
@@ -368,13 +385,16 @@ def main() -> None:
                           prefix_cache=args.prefix_cache,
                           shared_prefix=args.shared_prefix,
                           speculative=args.speculative,
-                          adaptive_spec=args.adaptive_spec)
+                          adaptive_spec=args.adaptive_spec,
+                          pipeline=args.pipeline)
     eng = out["engine"]
     mesh_note = (f", mesh={eng['mesh']}" if eng.get("mesh") else "")
     sched_note = ""
     if eng.get("schedule") == "unified":
+        pipe = (f", pipelined {eng['overlap_frac']:.0%} overlap"
+                if eng.get("pipeline") else ", sync")
         sched_note = (f", unified[{eng['max_batch_tokens']}t budget, "
-                      f"itl p95 {eng['itl_p95_s'] * 1e3:.0f}ms]")
+                      f"itl p95 {eng['itl_p95_s'] * 1e3:.0f}ms{pipe}]")
     spec_note = ""
     if eng.get("speculative_k"):
         adapt = ", adaptive" if eng.get("adaptive_spec") else ""

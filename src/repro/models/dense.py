@@ -603,7 +603,8 @@ def decode(cfg, params, token, cache, **fwd_kw):
     return logits_fn(cfg, params, hidden), cache
 
 
-def ragged_step(cfg, params, tokens, cache, logit_rows, **fwd_kw):
+def ragged_step(cfg, params, tokens, cache, logit_rows, greedy=False,
+                **fwd_kw):
     """Unified token-budget step: ONE forward over a flat ragged batch of
     mixed prefill-chunk and decode rows (``repro.launch.scheduler``).
 
@@ -624,7 +625,16 @@ def ragged_step(cfg, params, tokens, cache, logit_rows, **fwd_kw):
     scheduler marks each decode row and each prompt-completing chunk's
     last row; padding entries are discarded by the caller) — the unembed
     cost scales with sequences, not packed tokens.
-    -> (logits (R, 1, V), cache)."""
+
+    ``greedy=True`` is device-resident sampling for the pipelined serve
+    loop: instead of (R, 1, V) logits, return the greedy next token at
+    each logit row as (R,) int32 — only R token ids ever cross D2H, and
+    the argmax (lowest index on ties, matching ``np.argmax``) runs
+    inside the same jitted program as the forward.
+    -> (logits (R, 1, V), cache), or (tokens (R,), cache) when greedy."""
     hidden, _, cache = forward(cfg, params, tokens, cache=cache, **fwd_kw)
     sel = jnp.take(hidden[:, 0], logit_rows, axis=0)[:, None]
-    return logits_fn(cfg, params, sel), cache
+    logits = logits_fn(cfg, params, sel)
+    if greedy:
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+    return logits, cache

@@ -34,7 +34,10 @@ class Model:
     copy_paged_pages: Optional[Callable] = None
     # (params, tokens (T,1), cache, logit_rows) -> (logits (R,1,V), cache):
     # the unified token-budget step over a flat ragged batch of mixed
-    # prefill-chunk + decode rows (None for families without one)
+    # prefill-chunk + decode rows (None for families without one).
+    # ``greedy=True`` returns (tokens (R,) int32, cache) instead — the
+    # argmax folds into the jitted step (device-resident sampling for
+    # the pipelined serve loop; see launch/README.md)
     ragged_step: Optional[Callable] = None
     # (params) -> fused-serving params (QKV/gate-up concat + colsum /
     # pre-unpacked codes; see models.dense.make_serving_params); None for

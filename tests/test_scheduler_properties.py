@@ -280,11 +280,14 @@ class _RaggedStubModel:
         return (jax.nn.one_hot(nxt, _V)[:, None, :],
                 dict(cache, pos=cache["pos"] + 1))
 
-    def ragged_step(self, params, tokens, cache, logit_rows, **kw):
+    def ragged_step(self, params, tokens, cache, logit_rows, greedy=False,
+                    **kw):
         import jax.nn
         fed = jnp.take(tokens[:, 0], logit_rows)
         pos = jnp.take(cache["pos"], logit_rows)
         nxt = (fed * 7 + pos * 13 + 1) % _V
+        if greedy:      # device-resident sampling (models.dense contract)
+            return nxt.astype(jnp.int32), dict(cache)
         return (jax.nn.one_hot(nxt, _V)[:, None, :],
                 dict(cache))
 
@@ -365,26 +368,40 @@ def test_plan_log_is_a_capped_ring():
 
 
 def test_pack_reuses_descriptor_buffers():
-    """pack() reuses one set of host descriptor buffers across steps (no
-    per-step allocation in the hot loop): the arrays returned by
-    consecutive packs are the SAME objects, refilled — and refilled
-    correctly (packing the same plan twice gives equal contents)."""
+    """pack() reuses a fixed ring of host descriptor buffers across
+    steps (no per-step allocation in the hot loop). The ring is 2 deep —
+    the pipelined loop may still hold step N's descriptors (aliased by a
+    possibly-unmaterialized ``jnp.asarray``) while step N+1 packs — so
+    consecutive packs alternate buffer sets and packs two steps apart
+    return the SAME objects, refilled correctly (packing the same plan
+    repeatedly gives equal contents)."""
     sched = _make_sched(2, 6, 32)
     rng = np.random.default_rng(5)
     for rid in range(2):
         sched.queue.append(Request(
             rid, rng.integers(0, _V, 4).astype(np.int32), 2))
     plan = sched.plan(0)
-    first = sched.pack(plan)
-    snap = {k: np.array(v, copy=True) for k, v in first.items()
+    packs = [sched.pack(plan) for _ in range(4)]
+    snap = {k: np.array(v, copy=True) for k, v in packs[0].items()
             if isinstance(v, np.ndarray)}
-    second = sched.pack(plan)
-    for k, v in second.items():
-        if isinstance(v, np.ndarray):
-            assert v.base is not None or v is first[k] or \
-                v.__array_interface__["data"] == \
-                first[k].__array_interface__["data"], k
-            np.testing.assert_array_equal(v, snap[k])
+
+    def _same_buf(a, b):
+        return (b.base is not None or b is a or
+                b.__array_interface__["data"] ==
+                a.__array_interface__["data"])
+
+    for step in (2, 3):         # ring period 2: step k aliases step k-2
+        for k, v in packs[step].items():
+            if isinstance(v, np.ndarray):
+                assert _same_buf(packs[step - 2][k], v), (step, k)
+    for k, v in packs[1].items():   # adjacent steps must NOT alias —
+        if isinstance(v, np.ndarray) and v.size:    # that is the ring's
+            assert (v.__array_interface__["data"][0]  # reason to exist
+                    != packs[0][k].__array_interface__["data"][0]), k
+    for p in packs:
+        for k, v in p.items():
+            if isinstance(v, np.ndarray):
+                np.testing.assert_array_equal(v, snap[k])
 
 
 # ------------------------------------------- adaptive speculative depth

@@ -155,10 +155,15 @@ def test_speculative_kv_rewind_invariant():
                             seed=regenerate.SEED)
     # a draft from a DIFFERENT seed proposes essentially random tokens,
     # guaranteeing rejections (identity and rewind are structural — the
-    # draft's quality only sets the acceptance rate)
+    # draft's quality only sets the acceptance rate). The per-step
+    # coverage check below is a SYNC-loop property: the pipelined loop
+    # legitimately holds extra pages for the in-flight ahead plan
+    # between steps (its drained-pool equality lives in
+    # test_pipelined_engine.py), so pin the synchronous loop here.
     eng = ServeEngine(model, params, n_slots=2, max_len=24,
                       schedule="unified", max_batch_tokens=12, page_size=8,
-                      speculative_k=2, draft=_draft(key="seed1", seed=1))
+                      speculative_k=2, draft=_draft(key="seed1", seed=1),
+                      pipeline=False)
     for r in reqs:
         eng.submit(r["tokens"], r["max_new_tokens"], rid=r["rid"])
     sched = eng.sched
